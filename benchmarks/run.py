@@ -1,0 +1,70 @@
+"""Benchmark harness: `PYTHONPATH=src python -m benchmarks.run`.
+
+Runs the six paper-claim benchmarks (B1-B6) plus the data-pipeline
+throughput bench, prints the results, and writes
+benchmarks/results/koalja_bench.json. The roofline tables are produced
+separately by `python -m repro.launch.dryrun --all` + `benchmarks.report`
+(they need the 512-device env, which must not leak into this process).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+
+def bench_pipeline_throughput():
+    from repro.configs import get_config
+    from repro.data.pipeline import build_data_pipeline, next_batch
+
+    cfg = get_config("stablelm-1.6b").reduced()
+    mgr = build_data_pipeline(cfg, global_batch=8, seq_len=128)
+    next_batch(mgr, cfg)  # warm
+    t0 = time.perf_counter()
+    n = 20
+    for _ in range(n):
+        next_batch(mgr, cfg)
+    dt = time.perf_counter() - t0
+    stats = mgr.stats()
+    return {
+        "batches_per_s": n / dt,
+        "tokens_per_s": n * 8 * 128 / dt,
+        "avs_carried": sum(l["carried"] for l in stats["links"].values()),
+        "store_stats": stats["store"],
+    }
+
+
+def main():
+    from benchmarks.bench_koalja import ALL
+
+    results = {}
+    benches = dict(ALL)
+    benches["B7_pipeline_throughput"] = bench_pipeline_throughput
+    for name, fn in benches.items():
+        t0 = time.perf_counter()
+        try:
+            results[name] = {"result": fn(), "bench_wall_s": time.perf_counter() - t0}
+            status = "ok"
+        except Exception as e:  # pragma: no cover
+            results[name] = {"error": repr(e)}
+            status = "FAIL"
+        print(f"[{status}] {name} ({results[name].get('bench_wall_s', 0):.2f}s)")
+        for k, v in (results[name].get("result") or {}).items():
+            print(f"    {k}: {v}")
+
+    out_dir = os.path.join(os.path.dirname(__file__), "results")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "koalja_bench.json")
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, default=str)
+    print(f"\nwrote {path}")
+    failures = [n for n, r in results.items() if "error" in r]
+    if failures:
+        print("FAILED:", failures)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: Koalja-JAX — provenance-first data circuitry for multi-pod TPU ML."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,184 @@
+"""Provenance-stamped sharded checkpoints.
+
+Every checkpoint is a Koalja artifact: the payload (one npz per host with
+that host's addressable shards — Principle 2: storage near the dependent)
+plus an AnnotatedValue travel document naming the exact step, code version,
+config hash and mesh that produced it. Restart is 'make'-mode: pull the
+latest checkpoint AV and resume — completed work cache-hits.
+
+Async save: the host-side serialization runs on a worker thread so the train
+loop only blocks for the device->host copy of its own shards.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core import AnnotatedValue, ArtifactStore, content_hash
+
+
+def _flatten_with_paths(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(
+    directory: str,
+    state: Any,
+    step: int,
+    *,
+    meta: Optional[dict] = None,
+    software_version: str = "?",
+    store: Optional[ArtifactStore] = None,
+    host_id: int = 0,
+) -> AnnotatedValue:
+    """Write <dir>/step_<N>/host_<id>.npz + manifest; returns the AV."""
+    os.makedirs(directory, exist_ok=True)
+    step_dir = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(step_dir, exist_ok=True)
+    flat = _flatten_with_paths(state)
+    arrays = {}
+    for k, v in flat.items():
+        # each host saves only its addressable shards; on single-host this is
+        # the full array (np.asarray gathers the local view)
+        arrays[k] = np.asarray(jax.device_get(v))
+    path = os.path.join(step_dir, f"host_{host_id}.npz")
+    np.savez(path, **arrays)
+
+    manifest = {
+        "step": step,
+        "host": host_id,
+        "keys": sorted(arrays.keys()),
+        "software_version": software_version,
+        "meta": meta or {},
+        "written_at": time.time(),
+        "payload_hash": content_hash({k: (v.shape, str(v.dtype)) for k, v in arrays.items()}),
+    }
+    with open(os.path.join(step_dir, f"manifest_{host_id}.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    av = AnnotatedValue.produce(
+        manifest["payload_hash"],
+        f"file://{path}",
+        source_task="checkpoint.save",
+        software_version=software_version,
+        meta={"step": step, "dir": step_dir},
+    )
+    if store is not None:
+        store.put(manifest)
+    return av
+
+
+def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None, host_id: int = 0):
+    """Restore into the structure of `like` (shapes validated). Returns
+    (state, manifest)."""
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(directory) if d.startswith("step_")
+    )
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    step = steps[-1] if step is None else step
+    step_dir = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(step_dir, f"host_{host_id}.npz"))
+    with open(os.path.join(step_dir, f"manifest_{host_id}.json")) as f:
+        manifest = json.load(f)
+
+    flat_like = _flatten_with_paths(like)
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    leaves_by_key = {k: data[k] for k in flat_like}
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out_leaves = []
+    for path, leaf in paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        arr = leaves_by_key[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        out_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out_leaves), manifest
+
+
+class CheckpointManager:
+    """Async save + retention + provenance wiring."""
+
+    def __init__(
+        self,
+        directory: str,
+        *,
+        keep: int = 3,
+        software_version: str = "?",
+        store: Optional[ArtifactStore] = None,
+    ) -> None:
+        self.directory = directory
+        self.keep = keep
+        self.software_version = software_version
+        self.store = store
+        self._thread: Optional[threading.Thread] = None
+        self.saved: list = []  # AVs
+
+    def save_async(self, state: Any, step: int, meta: Optional[dict] = None):
+        # device->host copy happens here (blocking, cheap relative to IO)
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        self.wait()
+
+        def _write():
+            av = save_checkpoint(
+                self.directory,
+                host_state,
+                step,
+                meta=meta,
+                software_version=self.software_version,
+                store=self.store,
+            )
+            self.saved.append(av)
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def latest_step(self) -> Optional[int]:
+        if not os.path.isdir(self.directory):
+            return None
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.directory)
+            if d.startswith("step_")
+        )
+        return steps[-1] if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None):
+        return restore_checkpoint(self.directory, like, step)
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.directory)
+            if d.startswith("step_")
+        )
+        for s in steps[: -self.keep]:
+            import shutil
+
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)

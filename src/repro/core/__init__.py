@@ -1,0 +1,31 @@
+"""Koalja core: smart tasks + smart links + annotated values + provenance.
+
+The paper's contribution (Burgess & Prangsma, 2019) as a composable layer:
+data circuitry where payloads live in a tiered store, references (Annotated
+Values) flow on links, every artifact carries its travel document, and both
+'make' (pull) and 'reactive' (push) trigger modes share one engine.
+"""
+
+from .av import AnnotatedValue, Stamp, content_hash
+from .cache import ContentCache, snapshot_key
+from .evalloop import EvalLoop, build_eval_circuit
+from .link import RegionFenceError, SmartLink
+from .pipeline import Pipeline, PipelineManager
+from .policy import InputSpec, SnapshotPolicy
+from .provenance import ProvenanceRegistry
+from .store import ArtifactStore
+from .task import ServiceCall, SmartTask, software_version_of
+from .wireframe import GhostValue, ghost_run
+from .wiring import parse_wiring
+
+__all__ = [
+    "AnnotatedValue", "Stamp", "content_hash",
+    "ContentCache", "snapshot_key",
+    "EvalLoop", "build_eval_circuit",
+    "RegionFenceError", "SmartLink",
+    "Pipeline", "PipelineManager",
+    "InputSpec", "SnapshotPolicy",
+    "ProvenanceRegistry", "ArtifactStore",
+    "ServiceCall", "SmartTask", "software_version_of",
+    "GhostValue", "ghost_run", "parse_wiring",
+]

@@ -1,0 +1,162 @@
+"""Annotated Values — the unit of data handover in Koalja (paper §III.I).
+
+An AnnotatedValue (AV) is *not* data. It is a message that points to a storage
+location for the data, plus the metadata needed for forensic tracing:
+
+  - a unique identifier,
+  - the source task that produced it,
+  - pointers (URIs) to the links and storage locations of the actual data,
+  - a local timestamp referring to the clock of the source agent,
+  - the accumulated travel document (stamped at every checkpoint it passes).
+
+Payloads live in an :class:`repro.core.store.ArtifactStore`; links and tasks
+move AVs only. This is the paper's central transport optimization: moving a
+reference is free, moving the payload is the thing to avoid.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import json
+import time
+from typing import Any, Optional
+
+_AV_COUNTER = itertools.count()
+
+
+def _stable_hash_bytes(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()[:16]
+
+
+def content_hash(payload: Any) -> str:
+    """Content hash of a payload for cache keys and travel documents.
+
+    Arrays are hashed by (shape, dtype, bytes) — for jax Arrays we hash the
+    host copy only when small, otherwise (shape, dtype, trace-id) which is
+    stable within a process. Ghost values (ShapeDtypeStruct) hash by aval:
+    wireframing (paper §III.K) needs identity of *shape*, not data.
+    """
+    try:  # numpy-like arrays
+        import numpy as np
+
+        if hasattr(payload, "shape") and hasattr(payload, "dtype"):
+            if not hasattr(payload, "nbytes") or payload.nbytes is None:
+                # ShapeDtypeStruct / abstract value: hash the aval.
+                return _stable_hash_bytes(
+                    f"ghost:{payload.shape}:{payload.dtype}".encode()
+                )
+            if payload.nbytes <= (1 << 22):  # <= 4 MiB: hash real bytes
+                arr = np.asarray(payload)
+                return _stable_hash_bytes(
+                    arr.tobytes() + str(arr.shape).encode() + str(arr.dtype).encode()
+                )
+            # Large device arrays: avoid device->host transfer (transport
+            # avoidance applies to hashing too). Sample a deterministic
+            # stripe + shape/dtype. Documented as a sampled hash.
+            arr = np.asarray(payload).reshape(-1)
+            stripe = arr[:: max(1, arr.size // 4096)][:4096]
+            return _stable_hash_bytes(
+                stripe.tobytes() + f"{payload.shape}:{payload.dtype}:sampled".encode()
+            )
+    except Exception:
+        pass
+    if isinstance(payload, (dict, list, tuple)):
+        try:
+            return _stable_hash_bytes(
+                json.dumps(payload, sort_keys=True, default=repr).encode()
+            )
+        except TypeError:
+            pass
+    return _stable_hash_bytes(repr(payload).encode())
+
+
+@dataclasses.dataclass
+class Stamp:
+    """One entry in an AV's travel document (paper fig. 8/9)."""
+
+    task: str
+    event: str  # "produced" | "consumed" | "cached" | "transit" | "region"
+    software_version: str  # code hash of the task that touched it
+    timestamp: float
+    region: str = "local"
+    note: str = ""
+
+    def to_record(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class AnnotatedValue:
+    """Metadata wrapper around a stored payload reference."""
+
+    uid: str
+    source_task: str
+    uri: str  # storage location in the ArtifactStore
+    chash: str  # content hash of the payload
+    created_at: float  # clock of the source agent
+    region: str = "local"
+    meta: dict = dataclasses.field(default_factory=dict)
+    travel_document: list = dataclasses.field(default_factory=list)
+
+    @classmethod
+    def produce(
+        cls,
+        payload_hash: str,
+        uri: str,
+        source_task: str,
+        software_version: str,
+        region: str = "local",
+        meta: Optional[dict] = None,
+    ) -> "AnnotatedValue":
+        uid = f"av-{next(_AV_COUNTER):08d}-{payload_hash[:8]}"
+        av = cls(
+            uid=uid,
+            source_task=source_task,
+            uri=uri,
+            chash=payload_hash,
+            created_at=time.time(),
+            region=region,
+            meta=dict(meta or {}),
+        )
+        av.stamp(source_task, "produced", software_version, region=region)
+        return av
+
+    def stamp(
+        self,
+        task: str,
+        event: str,
+        software_version: str,
+        region: str = "local",
+        note: str = "",
+    ) -> None:
+        self.travel_document.append(
+            Stamp(
+                task=task,
+                event=event,
+                software_version=software_version,
+                timestamp=time.time(),
+                region=region,
+                note=note,
+            )
+        )
+
+    @property
+    def journey(self) -> list:
+        """The traveller log: ordered (task, event) pairs."""
+        return [(s.task, s.event) for s in self.travel_document]
+
+    def crossed_regions(self) -> list:
+        """Region transitions — audits 'data may not leave region X' policy."""
+        regions, out = [], []
+        for s in self.travel_document:
+            if not regions or regions[-1] != s.region:
+                regions.append(s.region)
+        for a, b in zip(regions, regions[1:]):
+            out.append((a, b))
+        return out
+
+    def to_record(self) -> dict:
+        d = dataclasses.asdict(self)
+        return d

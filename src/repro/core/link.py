@@ -1,0 +1,99 @@
+"""Smart Links (paper §III.J) — typed wires carrying AV references.
+
+A SmartLink connects one producer task output to one consumer task input. It
+holds a queue of AnnotatedValues and a *separate* notification channel
+(Principle 1: separation of channels by timescale): consumers may poll the
+data queue, or subscribe for arrival notifications when arrivals are slow
+relative to service time. Payloads never travel on the link — only AVs.
+
+Links carry region policy: an AV crossing into a link whose region differs
+from the AV's gets a 'transit' stamp, and a ``region_fence`` link refuses AVs
+from fenced regions (the paper's 'US data cannot leave the US' audit/enforce
+case, §III.L / §IV).
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Callable, Optional
+
+from .av import AnnotatedValue
+
+
+class RegionFenceError(RuntimeError):
+    pass
+
+
+class SmartLink:
+    def __init__(
+        self,
+        name: str,
+        src_task: str,
+        dst_task: str,
+        dst_input: str,
+        region: str = "local",
+        fenced_regions: tuple = (),
+        notify_threshold_s: float = 0.0,
+    ) -> None:
+        self.name = name
+        self.src_task = src_task
+        self.dst_task = dst_task
+        self.dst_input = dst_input
+        self.region = region
+        self.fenced_regions = tuple(fenced_regions)
+        # data channel
+        self._queue: deque = deque()
+        self._lock = threading.Lock()
+        # notification side channel (Principle 1)
+        self._subscribers: list = []
+        self.notify_threshold_s = notify_threshold_s
+        self.notifications_sent = 0
+        self.avs_carried = 0
+
+    # -- data channel ---------------------------------------------------------
+    def offer(self, av: AnnotatedValue, software_version: str = "?") -> None:
+        """Producer side: put an AV reference on the wire."""
+        if av.region in self.fenced_regions:
+            raise RegionFenceError(
+                f"AV {av.uid} from region {av.region!r} fenced on link {self.name}"
+            )
+        if av.region != self.region:
+            av.stamp(
+                self.name,
+                "transit",
+                software_version,
+                region=self.region,
+                note=f"{av.region}->{self.region}",
+            )
+        with self._lock:
+            self._queue.append(av)
+            self.avs_carried += 1
+        self._notify(av)
+
+    def poll(self) -> Optional[AnnotatedValue]:
+        """Consumer side: non-blocking get (the paper's 'get' on the
+        pseudo-stream; 'it wants to know if there is anything new')."""
+        with self._lock:
+            if self._queue:
+                return self._queue.popleft()
+        return None
+
+    def peek_count(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    # -- notification channel ---------------------------------------------------
+    def subscribe(self, callback: Callable) -> None:
+        self._subscribers.append(callback)
+
+    def _notify(self, av: AnnotatedValue) -> None:
+        for cb in self._subscribers:
+            cb(self, av)
+            self.notifications_sent += 1
+
+    def __repr__(self) -> str:
+        return (
+            f"SmartLink({self.src_task}->{self.dst_task}.{self.dst_input},"
+            f" depth={self.peek_count()})"
+        )

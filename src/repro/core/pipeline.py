@@ -1,0 +1,194 @@
+"""Pipeline (DCG) + PipelineManager (paper §III.B).
+
+The manager owns the registry of processes, the scheduling of work, and the
+assembly of metadata. Both trigger modes share one engine (the paper's point
+that they are not orthogonal):
+
+  - **reactive** (push): events arriving at the input end drive computation
+    downstream — ``push()`` / ``sample()`` then ``propagate()``.
+  - **make** (pull): a request for a target output triggers a hierarchical
+    rebuild of dependencies backwards, recursively — ``pull()`` — with
+    content-addressed cache hits standing in for up-to-date build artifacts.
+
+Cycles are allowed (DCG, not DAG): propagation is round-limited and
+rate-controlled rather than topology-restricted.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from .av import AnnotatedValue, content_hash
+from .cache import ContentCache
+from .link import SmartLink
+from .provenance import ProvenanceRegistry
+from .store import ArtifactStore
+from .task import SmartTask
+
+
+class Pipeline:
+    """The wiring diagram: tasks and the links between them."""
+
+    def __init__(self, name: str = "pipeline") -> None:
+        self.name = name
+        self.tasks: dict = {}
+        self.links: list = []
+
+    def add_task(self, task: SmartTask) -> SmartTask:
+        if task.name in self.tasks:
+            raise ValueError(f"duplicate task {task.name}")
+        self.tasks[task.name] = task
+        return task
+
+    def connect(
+        self,
+        src: str,
+        output: str,
+        dst: str,
+        dst_input: str,
+        **link_kwargs: Any,
+    ) -> SmartLink:
+        src_t, dst_t = self.tasks[src], self.tasks[dst]
+        if output not in src_t.outputs:
+            raise KeyError(f"{src} has no output {output!r}")
+        if dst_input not in {s.name for s in dst_t.input_specs}:
+            raise KeyError(f"{dst} has no input {dst_input!r}")
+        link = SmartLink(
+            name=f"{src}.{output}->{dst}.{dst_input}",
+            src_task=src,
+            dst_task=dst,
+            dst_input=dst_input,
+            **link_kwargs,
+        )
+        src_t.out_links.setdefault(output, []).append(link)
+        dst_t.in_links[dst_input] = link
+        self.links.append(link)
+        return link
+
+    def producers_of(self, task_name: str) -> list:
+        t = self.tasks[task_name]
+        return [l.src_task for l in t.in_links.values()]
+
+    def validate(self) -> list:
+        """Every non-source input must be wired. Returns list of problems."""
+        problems = []
+        for t in self.tasks.values():
+            for spec in t.input_specs:
+                if spec.name not in t.in_links and not t.source:
+                    problems.append(f"{t.name}.{spec.name} unwired")
+        return problems
+
+
+class PipelineManager:
+    def __init__(
+        self,
+        pipeline: Pipeline,
+        store: Optional[ArtifactStore] = None,
+        registry: Optional[ProvenanceRegistry] = None,
+        cache: Optional[ContentCache] = None,
+        max_rounds: int = 100,
+    ) -> None:
+        self.pipeline = pipeline
+        self.store = store or ArtifactStore()
+        self.registry = registry or ProvenanceRegistry()
+        # cache=None -> default ContentCache; cache=False -> caching disabled
+        self.cache = ContentCache() if cache is None else (cache or None)
+        self.max_rounds = max_rounds
+        self._register_design()
+
+    def _register_design(self) -> None:
+        for t in self.pipeline.tasks.values():
+            self.registry.register_task(
+                t.name,
+                [str(s) for s in t.input_specs],
+                t.outputs,
+                t.version,
+            )
+        for link in self.pipeline.links:
+            self.registry.add_design_edge(link.src_task, "precedes", link.dst_task)
+
+    # -- external data entry (edge sampling) -----------------------------------
+    def inject(self, task: str, input_name: str, payload: Any, region: str = "local"):
+        """Edge-node sampling: wrap an external payload as an AV and deliver it
+        to a task input ('data are intentionally sampled by the edge nodes')."""
+        uri, chash = self.store.put(payload)
+        av = AnnotatedValue.produce(chash, uri, f"edge:{input_name}", "edge", region=region)
+        self.registry.register_av(av)
+        t = self.pipeline.tasks[task]
+        av.stamp(t.name, "consumed", t.version, region=t.region)
+        t.policy.arrive(input_name, av)
+        return av
+
+    # -- reactive (push) mode ----------------------------------------------------
+    def push(self, task: str, region: str = "local", **payloads: Any) -> dict:
+        """Inject payloads into task inputs and propagate downstream."""
+        for iname, payload in payloads.items():
+            self.inject(task, iname, payload, region=region)
+        return self.propagate()
+
+    def sample(self, source_task: str) -> dict:
+        """Fire a source task once (sample its sensor) and propagate."""
+        t = self.pipeline.tasks[source_task]
+        if not t.source:
+            raise ValueError(f"{source_task} is not a source task")
+        out = t.execute(self.store, self.registry, self.cache)
+        fired = self.propagate()
+        fired.setdefault(source_task, []).append(out)
+        return fired
+
+    def propagate(self) -> dict:
+        """Run reactive rounds until quiescent (or round limit on cycles)."""
+        fired: dict = {}
+        for _ in range(self.max_rounds):
+            any_fired = False
+            for t in self.pipeline.tasks.values():
+                t.ingest()
+                while t.ready():
+                    out = t.execute(self.store, self.registry, self.cache)
+                    fired.setdefault(t.name, []).append(out)
+                    any_fired = True
+                    t.ingest()
+            if not any_fired:
+                break
+        return fired
+
+    # -- make (pull) mode -----------------------------------------------------------
+    def pull(self, target: str, _visiting: Optional[set] = None) -> dict:
+        """Request the target task's outputs, rebuilding dependencies
+        backwards recursively. Unchanged subtrees resolve as cache hits."""
+        _visiting = _visiting if _visiting is not None else set()
+        if target in _visiting:  # cycle guard: reuse last outputs
+            return self.pipeline.tasks[target].last_outputs
+        _visiting.add(target)
+        t = self.pipeline.tasks[target]
+        for link in t.in_links.values():
+            self.pull(link.src_task, _visiting)
+        t.ingest()
+        if t.ready():
+            return t.execute(self.store, self.registry, self.cache)
+        if t.source and not t.input_specs:
+            return t.execute(self.store, self.registry, self.cache)
+        if t.last_outputs:
+            return t.last_outputs
+        raise RuntimeError(
+            f"pull({target}): dependencies produced no data and no prior "
+            f"outputs exist (pending={t.policy.stats()['pending']})"
+        )
+
+    # -- convenience -------------------------------------------------------------
+    def value_of(self, av: AnnotatedValue) -> Any:
+        return self.store.get(av.uri)
+
+    def stats(self) -> dict:
+        return {
+            "store": self.store.stats(),
+            "cache": self.cache.stats() if self.cache else None,
+            "tasks": {
+                n: {"executions": t.executions, "cache_hits": t.cache_hits}
+                for n, t in self.pipeline.tasks.items()
+            },
+            "links": {
+                l.name: {"carried": l.avs_carried, "notified": l.notifications_sent}
+                for l in self.pipeline.links
+            },
+        }

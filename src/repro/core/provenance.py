@@ -1,0 +1,167 @@
+"""The three provenance stories of paper §III.C / §III.L.
+
+1. **Traveller log** — what each data packet experienced along its journey
+   (which software version processed it, in what order). Stored as travel
+   documents on the AVs themselves plus a registry index here.
+2. **Checkpoint visitor log** — per-task log of which AVs passed through and
+   when, with interleaving timelines (paper fig. 9).
+3. **Design map** — the long-term map of checkpoints (tasks), their promises,
+   the kinds of data passed between them, and significant anomalies
+   (paper fig. 10: ``(a) --b(precedes)--> "b"`` records).
+
+Strict record format; queries are structured (no regex scraping, per §III.L).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from collections import defaultdict
+from typing import Any, Iterable, Optional
+
+from .av import AnnotatedValue
+
+
+@dataclasses.dataclass
+class VisitorEntry:
+    """One line of a checkpoint (task) visitor log."""
+
+    task: str
+    av_uid: str
+    event: str  # "arrived" | "executed" | "emitted" | "cache_hit" | "anomaly"
+    timestamp: float
+    software_version: str
+    note: str = ""
+
+    def to_record(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class ProvenanceRegistry:
+    """Pipeline-manager-held registry: the 'secure location' for travel docs."""
+
+    def __init__(self) -> None:
+        self._avs: dict = {}  # uid -> AnnotatedValue
+        self._visitor_logs: dict = defaultdict(list)  # task -> [VisitorEntry]
+        self._design_edges: set = set()  # (src, relation, dst)
+        self._task_promises: dict = {}  # task -> {inputs, outputs, version}
+        self._lineage: dict = {}  # av uid -> list of parent av uids
+        self.anomalies: list = []
+
+    # -- registration --------------------------------------------------------
+    def register_av(self, av: AnnotatedValue, parents: Iterable[str] = ()) -> None:
+        self._avs[av.uid] = av
+        self._lineage[av.uid] = list(parents)
+
+    def log_visit(
+        self,
+        task: str,
+        av_uid: str,
+        event: str,
+        software_version: str,
+        note: str = "",
+    ) -> None:
+        self._visitor_logs[task].append(
+            VisitorEntry(
+                task=task,
+                av_uid=av_uid,
+                event=event,
+                timestamp=time.time(),
+                software_version=software_version,
+                note=note,
+            )
+        )
+
+    def register_task(
+        self, task: str, inputs: list, outputs: list, version: str
+    ) -> None:
+        self._task_promises[task] = {
+            "inputs": list(inputs),
+            "outputs": list(outputs),
+            "version": version,
+        }
+
+    def add_design_edge(self, src: str, relation: str, dst: str) -> None:
+        self._design_edges.add((src, relation, dst))
+
+    def record_anomaly(self, task: str, note: str) -> None:
+        self.anomalies.append({"task": task, "note": note, "timestamp": time.time()})
+        self.log_visit(task, "-", "anomaly", self.task_version(task), note)
+
+    def task_version(self, task: str) -> str:
+        return self._task_promises.get(task, {}).get("version", "?")
+
+    # -- story 1: traveller log ----------------------------------------------
+    def traveller_log(self, av_uid: str) -> list:
+        """Full journey of one artifact: every stamp, in order."""
+        av = self._avs[av_uid]
+        return [s.to_record() for s in av.travel_document]
+
+    def lineage(self, av_uid: str, depth: int = -1) -> dict:
+        """Recursive forensic reconstruction: which AVs (and software
+        versions) led to this outcome — the paper's 'which changes triggered
+        the recomputation / which versions were involved'."""
+        av = self._avs[av_uid]
+        node = {
+            "uid": av_uid,
+            "source_task": av.source_task,
+            "software_version": next(
+                (s.software_version for s in av.travel_document if s.event == "produced"),
+                "?",
+            ),
+            "chash": av.chash,
+            "parents": [],
+        }
+        if depth != 0:
+            for p in self._lineage.get(av_uid, []):
+                if p in self._avs:
+                    node["parents"].append(self.lineage(p, depth - 1))
+        return node
+
+    # -- story 2: checkpoint visitor log --------------------------------------
+    def visitor_log(self, task: str) -> list:
+        return [e.to_record() for e in self._visitor_logs[task]]
+
+    def visits_of(self, av_uid: str) -> list:
+        """All checkpoints an AV passed through (cross-task query)."""
+        out = []
+        for task, entries in self._visitor_logs.items():
+            for e in entries:
+                if e.av_uid == av_uid:
+                    out.append(e.to_record())
+        return sorted(out, key=lambda r: r["timestamp"])
+
+    # -- story 3: design map ---------------------------------------------------
+    def design_map(self) -> dict:
+        """Topology + promises + anomalies (the invariant concept map)."""
+        return {
+            "tasks": dict(self._task_promises),
+            "edges": sorted(self._design_edges),
+            "anomalies": list(self.anomalies),
+        }
+
+    def design_map_text(self) -> str:
+        """Paper fig. 10 rendering: '(a) --b(precedes)--> \"b\"'."""
+        lines = ["<begin NON-LOCAL CAUSE>"]
+        for src, rel, dst in sorted(self._design_edges):
+            lines.append(f'({src}) --b({rel})--> "{dst}"')
+        lines.append("<end NON-LOCAL CAUSE>")
+        return "\n".join(lines)
+
+    # -- misc ------------------------------------------------------------------
+    def overhead_bytes(self) -> int:
+        """Metadata footprint — supports the paper's 'cheap to keep' claim."""
+        n = 0
+        for av in self._avs.values():
+            n += len(json.dumps(av.to_record(), default=repr))
+        for entries in self._visitor_logs.values():
+            for e in entries:
+                n += len(json.dumps(e.to_record()))
+        return n
+
+    def all_avs(self) -> list:
+        return list(self._avs)
+
+    def get_av(self, uid: str) -> AnnotatedValue:
+        return self._avs[uid]

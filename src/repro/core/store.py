@@ -1,0 +1,188 @@
+"""Tiered artifact store with the paper's rho placement policy (§III.F eq. 1).
+
+Two tiers model the paper's "near and far" storage (§III.G):
+
+  - ``local``  — in-process dict (device/host memory analogue): fast, bounded.
+  - ``object`` — a directory on disk standing in for S3/MinIO object storage:
+                 slower, durable, unbounded.
+
+The critical ratio  rho = avg latency(local) / avg latency(object)  is measured
+online from actual get() calls; placement policy consults it. The paper "bets on
+network attached storage" — we encode that as: artifacts above
+``local_bytes_limit`` go to the object tier, small/hot artifacts stay local, and
+Principle 2 (cache close to dependents) lets a consumer *pin* a remote artifact
+into its local tier.
+"""
+
+from __future__ import annotations
+
+import io
+import os
+import pickle
+import threading
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+from .av import content_hash
+
+
+class _Timer:
+    def __init__(self) -> None:
+        self.total = 0.0
+        self.count = 0
+
+    def add(self, dt: float) -> None:
+        self.total += dt
+        self.count += 1
+
+    @property
+    def avg(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+
+class ArtifactStore:
+    """Content-addressed, tiered payload store. URIs: ``local://h``, ``object://h``."""
+
+    def __init__(
+        self,
+        object_dir: Optional[str] = None,
+        local_bytes_limit: int = 1 << 28,  # 256 MiB of "device/host" tier
+        region: str = "local",
+    ) -> None:
+        self._local: dict = {}
+        self._local_bytes = 0
+        self.local_bytes_limit = local_bytes_limit
+        self.object_dir = object_dir
+        self.region = region
+        self._lock = threading.RLock()
+        self._lat = {"local": _Timer(), "object": _Timer()}
+        self.puts = 0
+        self.gets = 0
+        self.bytes_moved_to_object = 0
+        if object_dir:
+            os.makedirs(object_dir, exist_ok=True)
+
+    # -- rho policy ---------------------------------------------------------
+    @property
+    def rho(self) -> float:
+        """avg latency(internal storage) / avg latency(network storage).
+
+        rho < 1 means local is faster (the usual case); the placement policy
+        only spills to the object tier on capacity, mirroring the paper's
+        conclusion to bet on network storage for bulk, local for hot sets.
+        """
+        lo, ob = self._lat["local"].avg, self._lat["object"].avg
+        if ob == 0.0:
+            return 0.0
+        return lo / ob
+
+    @staticmethod
+    def _nbytes(payload: Any) -> int:
+        if hasattr(payload, "nbytes") and payload.nbytes is not None:
+            return int(payload.nbytes)
+        try:
+            return len(pickle.dumps(payload, protocol=4))
+        except Exception:
+            return 1 << 12
+
+    # -- API ----------------------------------------------------------------
+    def put(self, payload: Any, prefer: Optional[str] = None) -> tuple:
+        """Store payload; return (uri, content_hash). Reference-dedup by hash."""
+        h = content_hash(payload)
+        nbytes = self._nbytes(payload)
+        with self._lock:
+            self.puts += 1
+            if f"local://{h}" in self._uris():
+                return f"local://{h}", h
+            tier = prefer
+            if tier is None:
+                tier = (
+                    "local"
+                    if self._local_bytes + nbytes <= self.local_bytes_limit
+                    else "object"
+                )
+            if tier == "object" and self.object_dir is None:
+                tier = "local"  # no object tier configured
+            if tier == "local":
+                self._local[h] = payload
+                self._local_bytes += nbytes
+                return f"local://{h}", h
+            path = os.path.join(self.object_dir, h + ".pkl")
+            if not os.path.exists(path):
+                t0 = time.perf_counter()
+                with open(path, "wb") as f:
+                    self._dump(payload, f)
+                self._lat["object"].add(time.perf_counter() - t0)
+                self.bytes_moved_to_object += nbytes
+            return f"object://{h}", h
+
+    def get(self, uri: str) -> Any:
+        tier, h = uri.split("://", 1)
+        self.gets += 1
+        t0 = time.perf_counter()
+        if tier == "local":
+            payload = self._local[h]
+            self._lat["local"].add(time.perf_counter() - t0)
+            return payload
+        path = os.path.join(self.object_dir, h + ".pkl")
+        with open(path, "rb") as f:
+            payload = self._load(f)
+        self._lat["object"].add(time.perf_counter() - t0)
+        return payload
+
+    def pin_local(self, uri: str) -> str:
+        """Principle 2: cache a (possibly remote) artifact close to a dependent."""
+        tier, h = uri.split("://", 1)
+        if tier == "local":
+            return uri
+        payload = self.get(uri)
+        with self._lock:
+            self._local[h] = payload
+            self._local_bytes += self._nbytes(payload)
+        return f"local://{h}"
+
+    def evict_local(self, uri: str) -> None:
+        _, h = uri.split("://", 1)
+        with self._lock:
+            payload = self._local.pop(h, None)
+            if payload is not None:
+                self._local_bytes -= self._nbytes(payload)
+
+    def has(self, uri: str) -> bool:
+        tier, h = uri.split("://", 1)
+        if tier == "local":
+            return h in self._local
+        return self.object_dir is not None and os.path.exists(
+            os.path.join(self.object_dir, h + ".pkl")
+        )
+
+    def _uris(self):
+        return {f"local://{k}" for k in self._local}
+
+    # Arrays via np.save for fidelity; everything else via pickle.
+    @staticmethod
+    def _dump(payload: Any, f: io.IOBase) -> None:
+        if isinstance(payload, np.ndarray):
+            f.write(b"NPY0")
+            np.save(f, payload, allow_pickle=False)
+        else:
+            f.write(b"PKL0")
+            pickle.dump(payload, f, protocol=4)
+
+    @staticmethod
+    def _load(f: io.IOBase) -> Any:
+        tag = f.read(4)
+        if tag == b"NPY0":
+            return np.load(f, allow_pickle=False)
+        return pickle.load(f)
+
+    def stats(self) -> dict:
+        return {
+            "puts": self.puts,
+            "gets": self.gets,
+            "local_bytes": self._local_bytes,
+            "bytes_moved_to_object": self.bytes_moved_to_object,
+            "rho": self.rho,
+        }

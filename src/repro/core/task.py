@@ -1,0 +1,220 @@
+"""Smart Task agents (paper §III.I).
+
+A SmartTask wraps plugin user code in policy-guided services so the platform,
+not the user, handles: snapshot assembly from incoming links, content-addressed
+caching (make semantics), provenance stamping, out-of-band service-call
+freezing (§III.D), and anomaly notes.
+
+The user function receives the assembled snapshot as keyword arguments — the
+platform analogue of ``<USER CODE> <ARGV list>`` — and returns a dict of
+outputs (or a single value for single-output tasks).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import inspect
+import time
+from typing import Any, Callable, Optional
+
+from .av import AnnotatedValue, content_hash
+from .cache import ContentCache, snapshot_key
+from .policy import InputSpec, SnapshotPolicy
+from .provenance import ProvenanceRegistry
+from .store import ArtifactStore
+
+
+def software_version_of(fn: Callable) -> str:
+    """Code hash standing in for the container image digest: the 'software
+    version' recorded in every travel document."""
+    try:
+        src = inspect.getsource(fn)
+    except (OSError, TypeError):
+        code = getattr(fn, "__code__", None)
+        src = repr(code.co_code) + repr(code.co_consts) if code else repr(fn)
+    return "v-" + hashlib.sha256(src.encode()).hexdigest()[:12]
+
+
+class ServiceCall:
+    """An out-of-band client-server lookup made forensically traceable
+    (paper §III.D: 'if data were read from a mutable external source, say
+    DNS, cache the response for forensic traceability')."""
+
+    def __init__(self, name: str, fn: Callable) -> None:
+        self.name = name
+        self.fn = fn
+        self.version = software_version_of(fn)
+        self.frozen_responses: list = []
+
+    def __call__(self, *args: Any) -> Any:
+        resp = self.fn(*args)
+        self.frozen_responses.append(
+            {
+                "service": self.name,
+                "args_hash": content_hash(args),
+                "response_hash": content_hash(resp),
+                "timestamp": time.time(),
+            }
+        )
+        return resp
+
+
+class SmartTask:
+    def __init__(
+        self,
+        name: str,
+        fn: Callable,
+        inputs: list,
+        outputs: list,
+        mode: str = "all_new",
+        min_interval_s: float = 0.0,
+        region: str = "local",
+        cache_ttl_s: Optional[float] = None,
+        services: Optional[dict] = None,
+        source: bool = False,
+    ) -> None:
+        self.name = name
+        self.fn = fn
+        self.version = software_version_of(fn)
+        self.input_specs = [
+            s if isinstance(s, InputSpec) else InputSpec.parse(s) for s in inputs
+        ]
+        self.outputs = list(outputs)
+        self.policy = SnapshotPolicy(
+            self.input_specs, mode=mode, min_interval_s=min_interval_s
+        )
+        self.region = region
+        self.cache_ttl_s = cache_ttl_s
+        self.services = {
+            n: (s if isinstance(s, ServiceCall) else ServiceCall(n, s))
+            for n, s in (services or {}).items()
+        }
+        self.source = source
+        self.executions = 0
+        self.cache_hits = 0
+        # wired by Pipeline
+        self.in_links: dict = {}  # input name -> SmartLink
+        self.out_links: dict = {}  # output name -> [SmartLink]
+        self.last_outputs: dict = {}  # output name -> AnnotatedValue
+
+    # -- arrival handling (called by the pipeline manager) ---------------------
+    def ingest(self) -> int:
+        """Drain incoming links into the snapshot policy. Returns #AVs taken."""
+        n = 0
+        for spec in self.input_specs:
+            link = self.in_links.get(spec.name)
+            if link is None:
+                continue
+            while True:
+                av = link.poll()
+                if av is None:
+                    break
+                av.stamp(self.name, "consumed", self.version, region=self.region)
+                self.policy.arrive(spec.name, av)
+                n += 1
+        return n
+
+    def ready(self) -> bool:
+        return self.policy.ready()
+
+    # -- execution ---------------------------------------------------------------
+    def execute(
+        self,
+        store: ArtifactStore,
+        registry: ProvenanceRegistry,
+        cache: Optional[ContentCache] = None,
+    ) -> dict:
+        """Form a snapshot, consult the cache, run user code if needed, and
+        emit output AVs onto outgoing links. Returns {output_name: AV}."""
+        snap = self.policy.snapshot()
+        in_hashes, parent_uids = {}, []
+        for name, val in snap.items():
+            avs = val if isinstance(val, list) else [val]
+            hs = []
+            for av in avs:
+                hs.append(av.chash)
+                parent_uids.append(av.uid)
+                registry.log_visit(self.name, av.uid, "arrived", self.version)
+            in_hashes[name] = hs if isinstance(val, list) else hs[0]
+
+        extra = ";".join(
+            f"{n}:{s.version}:{len(s.frozen_responses)}" for n, s in self.services.items()
+        )
+        key = snapshot_key(self.version, in_hashes, extra=extra)
+
+        # Source tasks are sensors: each firing is a fresh observation of the
+        # world, never a cacheable pure function of (no) inputs.
+        if self.source:
+            cache = None
+
+        if cache is not None:
+            rec = cache.lookup(key)
+            if rec is not None:
+                self.cache_hits += 1
+                out_avs = {}
+                for oname, (uri, chash) in rec["outputs"].items():
+                    av = AnnotatedValue.produce(
+                        chash, uri, self.name, self.version, region=self.region,
+                        meta={"cache_hit": True},
+                    )
+                    av.stamp(self.name, "cached", self.version, region=self.region)
+                    registry.register_av(av, parents=parent_uids)
+                    registry.log_visit(self.name, av.uid, "cache_hit", self.version)
+                    out_avs[oname] = av
+                self._emit(out_avs)
+                return out_avs
+
+        # materialize payloads (Principle 2: pin near the dependent)
+        kwargs = {}
+        for name, val in snap.items():
+            if isinstance(val, list):
+                kwargs[name] = [store.get(store.pin_local(a.uri)) for a in val]
+            else:
+                kwargs[name] = store.get(store.pin_local(val.uri))
+        for sname, svc in self.services.items():
+            kwargs[sname] = svc
+
+        t0 = time.perf_counter()
+        result = self.fn(**kwargs)
+        dt = time.perf_counter() - t0
+        self.executions += 1
+        registry.log_visit(
+            self.name, "-", "executed", self.version, note=f"wall={dt:.6f}s"
+        )
+
+        if not isinstance(result, dict):
+            if len(self.outputs) != 1:
+                raise TypeError(
+                    f"task {self.name} returned a single value but declares "
+                    f"outputs {self.outputs}"
+                )
+            result = {self.outputs[0]: result}
+        missing = set(self.outputs) - set(result)
+        if missing:
+            raise KeyError(f"task {self.name} missing outputs {sorted(missing)}")
+
+        out_avs, cache_rec = {}, {"software_version": self.version, "outputs": {}}
+        for oname in self.outputs:
+            payload = result[oname]
+            uri, chash = store.put(payload)
+            av = AnnotatedValue.produce(
+                chash, uri, self.name, self.version, region=self.region
+            )
+            registry.register_av(av, parents=parent_uids)
+            registry.log_visit(self.name, av.uid, "emitted", self.version)
+            out_avs[oname] = av
+            cache_rec["outputs"][oname] = (uri, chash)
+        if cache is not None:
+            cache.insert(key, cache_rec, ttl_s=self.cache_ttl_s)
+        self._emit(out_avs)
+        return out_avs
+
+    def _emit(self, out_avs: dict) -> None:
+        self.last_outputs.update(out_avs)
+        for oname, av in out_avs.items():
+            for link in self.out_links.get(oname, []):
+                link.offer(av, software_version=self.version)
+
+    def __repr__(self) -> str:
+        ins = ", ".join(str(s) for s in self.input_specs)
+        return f"SmartTask({ins}) {self.name} ({', '.join(self.outputs)})"

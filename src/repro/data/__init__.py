@@ -1,0 +1,3 @@
+from .pipeline import TokenSource, build_data_pipeline, synthetic_batch
+
+__all__ = ["TokenSource", "build_data_pipeline", "synthetic_batch"]

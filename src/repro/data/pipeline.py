@@ -1,0 +1,119 @@
+"""Training data pipeline as Koalja circuitry.
+
+The stages — sample -> tokenize/pack -> batch -> shard — are SmartTasks wired
+by SmartLinks, so every training batch is an AnnotatedValue whose travel
+document names the source shard, the packing code version, and the batch
+content hash. A checkpoint restored at step N can therefore name exactly
+which data batches went into it (forensic reconstruction, paper §III.C).
+
+The generator is synthetic (deterministic per (seed, step): a Zipf-ish token
+sampler) — the "sensor at the edge". Real deployments drop a loader into the
+`sample` SmartTask; the wiring does not change.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core import Pipeline, PipelineManager, SmartTask
+from repro.models.common import ArchConfig
+
+
+def synthetic_batch(
+    cfg: ArchConfig, global_batch: int, seq_len: int, step: int, seed: int = 0
+) -> dict:
+    """Deterministic synthetic LM batch (Zipf-distributed token ids)."""
+    rng = np.random.RandomState((seed * 1_000_003 + step) % (2**31 - 1))
+    zipf = rng.zipf(1.3, size=(global_batch, seq_len + 1))
+    tokens_full = (zipf % cfg.vocab).astype(np.int32)
+    batch = {
+        "tokens": tokens_full[:, :-1],
+        "labels": tokens_full[:, 1:].copy(),
+    }
+    if cfg.encoder_layers:
+        batch["frames"] = rng.randn(global_batch, cfg.frontend_len, cfg.d_model).astype(
+            np.float32
+        )
+    if cfg.frontend == "vision":
+        batch["prefix"] = rng.randn(global_batch, cfg.frontend_len, cfg.d_model).astype(
+            np.float32
+        )
+    return batch
+
+
+class TokenSource:
+    """The edge sensor: emits raw document chunks at its own rate."""
+
+    def __init__(self, cfg: ArchConfig, seq_len: int, seed: int = 0):
+        self.cfg = cfg
+        self.seq_len = seq_len
+        self.seed = seed
+        self.cursor = 0
+
+    def sample(self) -> np.ndarray:
+        rng = np.random.RandomState((self.seed * 7_368_787 + self.cursor) % (2**31 - 1))
+        self.cursor += 1
+        doc_len = int(rng.randint(self.seq_len // 2, self.seq_len * 2))
+        return (rng.zipf(1.3, size=(doc_len,)) % self.cfg.vocab).astype(np.int32)
+
+
+def build_data_pipeline(
+    cfg: ArchConfig,
+    global_batch: int,
+    seq_len: int,
+    seed: int = 0,
+    rows_per_pack: Optional[int] = None,
+) -> PipelineManager:
+    """sample -> pack -> batch wired as a Koalja circuit.
+
+    Pull `manager.pull("batch")` for make-mode (backpressure: sampling happens
+    on demand); or `manager.sample("sample")` repeatedly for reactive mode.
+    """
+    src = TokenSource(cfg, seq_len, seed)
+    rows = rows_per_pack or max(1, global_batch // 8)
+
+    def sample() -> dict:
+        return {"doc": src.sample()}
+
+    def pack(doc) -> dict:
+        # documents are packed/truncated into fixed (rows, seq_len+1) panels
+        docs = doc if isinstance(doc, list) else [doc]
+        flat = np.concatenate(docs)
+        need = rows * (seq_len + 1)
+        reps = int(np.ceil(need / max(flat.size, 1)))
+        flat = np.tile(flat, reps)[:need]
+        return {"panel": flat.reshape(rows, seq_len + 1)}
+
+    def batch(panel) -> dict:
+        panels = panel if isinstance(panel, list) else [panel]
+        full = np.concatenate(panels, axis=0)[:global_batch]
+        while full.shape[0] < global_batch:
+            full = np.concatenate([full, full], axis=0)[:global_batch]
+        return {"batch": {"tokens": full[:, :-1], "labels": full[:, 1:].copy()}}
+
+    pipe = Pipeline("data")
+    pipe.add_task(SmartTask("sample", sample, inputs=[], outputs=["doc"], source=True))
+    # pack buffers 4 docs per panel; batch swaps-new-for-old so a slow source
+    # still lets training proceed on the freshest full panel set
+    pipe.add_task(SmartTask("pack", pack, inputs=["doc[4]"], outputs=["panel"]))
+    n_panels = max(1, global_batch // rows)
+    pipe.add_task(
+        SmartTask("batch", batch, inputs=[f"panel[{n_panels}]"], outputs=["batch"])
+    )
+    pipe.connect("sample", "doc", "pack", "doc")
+    pipe.connect("pack", "panel", "batch", "panel")
+    return PipelineManager(pipe)
+
+
+def next_batch(manager: PipelineManager, cfg: ArchConfig) -> dict:
+    """Drive the circuit until a fresh batch AV is produced; return payload."""
+    task = manager.pipeline.tasks["batch"]
+    before = task.last_outputs.get("batch")
+    for _ in range(64):
+        manager.sample("sample")
+        out = task.last_outputs.get("batch")
+        if out is not None and out is not before:
+            return manager.value_of(out)
+    raise RuntimeError("data pipeline did not produce a batch")

@@ -1,0 +1,63 @@
+"""Jit'd kernel wrappers + the kernel registry handed to the models.
+
+``kernel_set(use_pallas, interpret)`` returns the dict that
+``repro.models`` threads through the layers: on TPU the Pallas kernels run
+compiled; on CPU they run in interpret mode (tests) or the models fall back
+to the pure-jnp references (fast path for CI).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention
+from .flash_decode import flash_decode
+from .mamba_scan import mamba_scan
+from .moe_gmm import moe_gmm
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_kv", "interpret"))
+def flash_attention_op(q, k, v, *, causal=True, window=0, block_q=128, block_kv=128, interpret=True):
+    return flash_attention(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_len", "d_block", "interpret"))
+def mamba_scan_op(xc, dt, Bm, Cm, a, h0=None, *, chunk_len=256, d_block=512, interpret=True):
+    return mamba_scan(
+        xc, dt, Bm, Cm, a, h0,
+        chunk_len=chunk_len, d_block=d_block, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "interpret"))
+def moe_gmm_op(x, w_gate, w_up, w_down, *, block_c=128, block_f=256, interpret=True):
+    return moe_gmm(
+        x, w_gate, w_up, w_down,
+        block_c=block_c, block_f=block_f, interpret=interpret,
+    )
+
+
+def kernel_set(use_pallas: bool, interpret: bool = True) -> Optional[dict]:
+    """The dict the model trunk consumes (keys: moe_gmm, mamba_scan)."""
+    if not use_pallas:
+        return None
+
+    def _gmm(x, wg, wu, wd):
+        return moe_gmm(x, wg, wu, wd, interpret=interpret)
+
+    def _scan(xc, dt, Bm, Cm, a, h0=None, chunk_len=256):
+        return mamba_scan(xc, dt, Bm, Cm, a, h0, chunk_len=chunk_len, interpret=interpret)
+
+    def _decode(q, k, v, k_pos, q_pos, n_valid, window=0):
+        return flash_decode(
+            q, k, v, k_pos, q_pos, n_valid, window=window, interpret=interpret
+        )
+
+    return {"moe_gmm": _gmm, "mamba_scan": _scan, "flash_decode": _decode}

@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Deliberately naive: full score matrices, dense per-expert matmuls, direct
+sequential scans. Used by tests to validate the kernels across shape/dtype
+sweeps, and by the models on CPU where Mosaic lowering is unavailable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def reference_attention(
+    q: jax.Array,  # (B, Lq, H, Dh)
+    k: jax.Array,  # (B, Lk, KVH, Dh)
+    v: jax.Array,  # (B, Lk, KVH, Dh)
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    B, Lq, H, Dh = q.shape
+    Lk, KVH = k.shape[1], k.shape[2]
+    gq = H // KVH
+    qg = q.reshape(B, Lq, KVH, gq, Dh)
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    ) * (Dh**-0.5)
+    q_pos = jnp.arange(Lq)[:, None]
+    k_pos = jnp.arange(Lk)[None, :]
+    ok = jnp.ones((Lq, Lk), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v, preferred_element_type=jnp.float32)
+    return o.reshape(B, Lq, H, Dh).astype(q.dtype)
+
+
+def reference_selective_scan(
+    xc: jax.Array,  # (B, L, Di)
+    dt: jax.Array,  # (B, L, Di) f32 (post-softplus)
+    Bm: jax.Array,  # (B, L, N) f32
+    Cm: jax.Array,  # (B, L, N) f32
+    a: jax.Array,  # (Di, N) f32 negative
+    h0: jax.Array | None = None,
+):
+    """Direct sequential scan over time. Returns (y (B,L,Di) f32, h_final)."""
+    B, L, Di = xc.shape
+    N = a.shape[1]
+    h = jnp.zeros((B, Di, N), jnp.float32) if h0 is None else h0
+    xcf = xc.astype(jnp.float32)
+
+    def step(h, t):
+        ab = jnp.exp(dt[:, t, :, None] * a)  # (B,Di,N)
+        h = ab * h + (dt[:, t] * xcf[:, t])[..., None] * Bm[:, t, None, :]
+        y = jnp.einsum("bin,bn->bi", h, Cm[:, t])
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(L))
+    return ys.transpose(1, 0, 2), h
+
+
+def reference_decode(
+    q: jax.Array,  # (B, 1, H, Dh)
+    k: jax.Array,  # (B, S, KVH, Dh)
+    v: jax.Array,  # (B, S, KVH, Dh)
+    k_pos: jax.Array,  # (B, S)
+    q_pos: jax.Array,  # (B,)
+    n_valid: jax.Array,  # (B,)
+    *,
+    window: int = 0,
+) -> jax.Array:
+    B, _, H, Dh = q.shape
+    S, KVH = k.shape[1], k.shape[2]
+    gq = H // KVH
+    qg = q.reshape(B, 1, KVH, gq, Dh)
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32
+    ) * (Dh**-0.5)
+    ok = (k_pos <= q_pos[:, None]) & (jnp.arange(S)[None, :] < n_valid[:, None])
+    if window > 0:
+        ok &= k_pos > (q_pos[:, None] - window)
+    s = jnp.where(ok[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v, preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+def reference_gmm(
+    x: jax.Array,  # (E, C, D) per-expert token bins
+    w_gate: jax.Array,  # (E, D, F)
+    w_up: jax.Array,  # (E, D, F)
+    w_down: jax.Array,  # (E, F, D)
+) -> jax.Array:
+    g = jnp.einsum("ecd,edf->ecf", x, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", x, w_up)
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, w_down)

@@ -1,0 +1,147 @@
+"""Public model API: build a Model from an ArchConfig and expose the three
+step functions the runtime lowers — ``train_loss``, ``prefill``,
+``decode_step``. These are pure functions of (params, batch/state); the
+distribution layer (repro.dist) jits them with shardings and the Koalja layer
+(repro.core) wraps them as SmartTasks.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig
+from .transformer import Model
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+
+def train_loss(
+    model: Model,
+    params: dict,
+    batch: dict,
+    kernels: Optional[dict] = None,
+    aux_weight: float = 0.01,
+):
+    """batch: tokens (B,L) int32, labels (B,L) int32 (-1 ignore), plus
+    'frames' (B,T,D) for enc-dec or 'prefix' (B,Lf,D) for VLM stubs.
+    Returns (loss, metrics)."""
+    cfg = model.cfg
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = model.embed(params, tokens)
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None], tokens.shape)
+
+    memory = None
+    if cfg.encoder_layers:
+        memory = model.encode(params, batch["frames"])
+    if cfg.frontend != "none" and "prefix" in batch:
+        prefix = batch["prefix"].astype(x.dtype)  # (B, Lf, D) stub embeddings
+        x = jnp.concatenate([prefix, x], axis=1)
+        Lf = prefix.shape[1]
+        positions = jnp.broadcast_to(
+            jnp.arange(x.shape[1])[None], (x.shape[0], x.shape[1])
+        )
+        labels = jnp.concatenate(
+            [jnp.full((labels.shape[0], Lf), -1, labels.dtype), labels], axis=1
+        )
+
+    x, aux, _ = model.trunk(params, x, positions, memory=memory, kernels=kernels)
+    ce = model.chunked_loss(params, x, labels)
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_serve_state(model: Model, batch: int, max_len: int) -> dict:
+    return {
+        "caches": model.init_cache(batch, max_len),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(
+    model: Model,
+    params: dict,
+    tokens: jax.Array,  # (B, Lp)
+    state: dict,
+    frames: Optional[jax.Array] = None,
+    prefix: Optional[jax.Array] = None,
+    kernels: Optional[dict] = None,
+):
+    """Run the prompt through the trunk filling the caches; returns
+    (last_logits (B, V), state)."""
+    cfg = model.cfg
+    x = model.embed(params, tokens)
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    B, L, _ = x.shape
+    positions = state["t"] + jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    memory = model.encode(params, frames) if cfg.encoder_layers else None
+    x, _, caches = model.trunk(
+        params, x, positions, caches=state["caches"], memory=memory, kernels=kernels
+    )
+    logits = model.logits(params, x[:, -1:])[:, 0]
+    new_state = {"caches": caches, "t": state["t"] + L}
+    if memory is not None:
+        new_state["memory"] = memory
+    return logits, new_state
+
+
+def decode_step(
+    model: Model,
+    params: dict,
+    tokens: jax.Array,  # (B, 1) the latest sampled token
+    state: dict,
+    kernels: Optional[dict] = None,
+):
+    """One autoregressive step against the KV/SSM caches."""
+    x = model.embed(params, tokens)
+    B = tokens.shape[0]
+    positions = jnp.broadcast_to(state["t"][None, None], (B, 1))
+    x, _, caches = model.trunk(
+        params,
+        x,
+        positions,
+        caches=state["caches"],
+        memory=state.get("memory"),
+        kernels=kernels,
+    )
+    logits = model.logits(params, x)[:, 0]  # (B, V)
+    return logits, {**state, "caches": caches, "t": state["t"] + 1}
+
+
+def greedy_generate(
+    model: Model,
+    params: dict,
+    prompt: jax.Array,  # (B, Lp)
+    n_steps: int,
+    max_len: int,
+    frames: Optional[jax.Array] = None,
+    prefix: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Reference sampler used by tests/examples (greedy, jit-scanned)."""
+    state = init_serve_state(model, prompt.shape[0], max_len)
+    logits, state = prefill(model, params, prompt, state, frames=frames, prefix=prefix)
+    tok0 = jnp.argmax(logits, axis=-1).astype(prompt.dtype)[:, None]
+
+    def body(carry, _):
+        tok, st = carry
+        lg, st = decode_step(model, params, tok, st)
+        nxt = jnp.argmax(lg, axis=-1).astype(tok.dtype)[:, None]
+        return (nxt, st), nxt
+
+    (_, _), toks = jax.lax.scan(body, (tok0, state), None, length=n_steps - 1)
+    return jnp.concatenate([tok0, toks[:, :, 0].T], axis=1)  # (B, n_steps)

@@ -1,0 +1,31 @@
+"""Learning-rate schedules as pure step -> lr functions (jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = (step - warmup_steps) / max(total_steps - warmup_steps, 1)
+        decay = peak_lr + (floor - peak_lr) * jnp.clip(frac, 0.0, 1.0)
+        return jnp.where(step < warmup_steps, warm, decay)
+
+    return fn
+
+
+def cosine_warmup(peak_lr: float, warmup_steps: int, total_steps: int, floor_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return fn

@@ -1,0 +1,17 @@
+from .model import (
+    V5E,
+    HardwareSpec,
+    RooflineReport,
+    analyze_compiled,
+    collective_bytes,
+    model_flops,
+)
+
+__all__ = [
+    "V5E",
+    "HardwareSpec",
+    "RooflineReport",
+    "analyze_compiled",
+    "collective_bytes",
+    "model_flops",
+]

@@ -1,0 +1,474 @@
+"""Trip-count-aware cost extraction from optimized HLO text.
+
+``compiled.cost_analysis()`` visits each while-loop body ONCE, so any model
+whose layers run under ``lax.scan`` (all of ours: the compiled HLO is O(1) in
+depth by design) under-counts FLOPs/bytes/collectives by the trip count.
+XLA's optimized HLO carries ``backend_config={"known_trip_count":{"n":N}}``
+on every while op, so we walk the module call graph with multipliers:
+
+  cost(entry) = sum(op costs) with
+  cost(while) = trips x cost(body) + trips x cost(cond)
+  cost(fusion/call) = cost(called computation)
+
+Counted:
+  - dot FLOPs: 2 x elems(result) x contraction extent (from operand shapes)
+  - elementwise arithmetic FLOPs: elems(result) (transcendentals weighted 4x)
+  - reduce / reduce-window FLOPs: elems(operand)
+  - HBM traffic: for materializing ops (dot, fusion, copy, dynamic-slice/
+    update, reduce(-window), gather/scatter, sort, collectives): result bytes
+    + operand bytes. Ops that fuse on TPU (inside fusion computations) are
+    not double counted — only fusion boundaries count.
+  - collective payloads by kind, ring-algorithm weighted with the replica
+    group size parsed per op.
+
+This is a structural model (CPU-backend HLO stands in for TPU HLO); the
+numbers are for roofline *terms*, not wall-clock predictions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPLINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\("
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_SET_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_TRANSCENDENTAL = {
+    "exponential", "log", "tanh", "logistic", "rsqrt", "sqrt", "power",
+    "sine", "cosine", "expm1", "log1p", "erf", "atan2", "cbrt",
+}
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "compare", "select", "and", "or", "xor", "not", "negate", "abs",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "sign",
+    "clamp", "remainder", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "clz", "popcnt",
+} | _TRANSCENDENTAL
+# Ops that materialize HBM buffers in a well-fused TPU program. Pure layout /
+# elementwise ops (reshape, convert, broadcast, transpose, copy ...) are
+# assumed to fuse into consumers / alias on TPU even where the CPU backend
+# materializes them, so they are deliberately NOT counted — the memory term
+# models the fused program (see EXPERIMENTS.md §Roofline method).
+_TRAFFIC_OPS = {
+    "dot", "convolution", "fusion", "dynamic-slice",
+    "dynamic-update-slice", "reduce", "reduce-window", "sort", "gather",
+    "scatter", "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "select-and-scatter", "rng", "cholesky", "triangular-solve",
+}
+_COLLECTIVES = {
+    "all-reduce": "all-reduce",
+    "all-reduce-start": "all-reduce",
+    "all-gather": "all-gather",
+    "all-gather-start": "all-gather",
+    "reduce-scatter": "reduce-scatter",
+    "all-to-all": "all-to-all",
+    "collective-permute": "collective-permute",
+    "collective-permute-start": "collective-permute",
+}
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_text: str
+    opcode: str
+    operands: list
+    raw: str
+
+
+_SCOPE_RE = re.compile(r'op_name="[^"]*?(pallas_[\w]+)')
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(lambda: {"bytes": 0.0, "weighted": 0.0, "count": 0.0})
+    )
+    # per named-scope attribution (jax.named_scope("pallas_*") markers around
+    # regions that run as fused Pallas kernels on TPU)
+    buckets: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(lambda: {"flops": 0.0, "traffic_bytes": 0.0})
+    )
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.traffic_bytes += other.traffic_bytes * mult
+        for k, v in other.collective.items():
+            e = self.collective[k]
+            e["bytes"] += v["bytes"] * mult
+            e["weighted"] += v["weighted"] * mult
+            e["count"] += v["count"] * mult
+        for k, v in other.buckets.items():
+            b = self.buckets[k]
+            b["flops"] += v["flops"] * mult
+            b["traffic_bytes"] += v["traffic_bytes"] * mult
+
+
+def _shape_elems_list(type_text: str):
+    out = []
+    for m in _SHAPE_RE.finditer(type_text):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out.append((n, _DTYPE_BYTES[dt], dims))
+    return out
+
+def _shape_bytes(type_text: str) -> int:
+    return sum(n * b for n, b, _ in _shape_elems_list(type_text))
+
+
+def _shape_elems(type_text: str) -> int:
+    return sum(n for n, _, _ in _shape_elems_list(type_text))
+
+
+def _split_args_attrs(rest: str):
+    """rest = text after the opening '(' of the op. Returns (args, attrs)."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i], rest[i + 1 :]
+    return rest, ""
+
+
+def parse_module(text: str):
+    """-> (computations: {name: [Op]}, entry_name)."""
+    comps: dict = {}
+    entry = None
+    cur_name = None
+    cur_ops: list = []
+    for line in text.splitlines():
+        if line.startswith("%") or line.startswith("ENTRY"):
+            # computation header: `%name (params) -> type {` / `ENTRY %name ...`
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m and line.rstrip().endswith("{"):
+                cur_name = m.group(1)
+                cur_ops = []
+                comps[cur_name] = cur_ops
+                if line.startswith("ENTRY"):
+                    entry = cur_name
+                continue
+        if cur_name is None:
+            continue
+        if line.strip() == "}":
+            cur_name = None
+            continue
+        m = _OPLINE_RE.match(line)
+        if not m:
+            continue
+        name, type_text, opcode = m.groups()
+        rest = line[m.end():]
+        args, attrs = _split_args_attrs(rest)
+        operands = re.findall(r"%([\w.\-]+)", args)
+        cur_ops.append(_Op(name, type_text, opcode, operands, line))
+    return comps, entry
+
+
+def _group_size(raw: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(raw)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_SET_RE.search(raw)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1)
+    return default
+
+
+def _called_comps(raw: str):
+    """Names referenced by calls=/body=/condition=/branch computations."""
+    out = {}
+    for key in ("calls", "body", "condition", "to_apply"):
+        m = re.search(rf"{key}=%?([\w.\-]+)", raw)
+        if m:
+            out[key] = m.group(1)
+    m = re.search(r"branch_computations=\{([^}]*)\}", raw)
+    if m:
+        out["branches"] = [s.strip().lstrip("%") for s in m.group(1).split(",")]
+    return out
+
+
+class HloCostModel:
+    def __init__(self, text: str, n_devices: int, debug: bool = False):
+        self.comps, self.entry = parse_module(text)
+        self.n_devices = n_devices
+        self._memo: dict = {}
+        self.unknown_trip_whiles = 0
+        self.debug = debug
+        self.traffic_notes: list = []  # (bytes_one_visit, op raw) if debug
+
+    def _note_traffic(self, op: _Op, t: float):
+        if self.debug:
+            self.traffic_notes.append((t, op.opcode, op.raw[:200]))
+
+    def cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self._comp_cost(self.entry, top=True)
+
+    # -- per computation -------------------------------------------------------
+    def _comp_cost(self, comp_name: str, top: bool) -> Cost:
+        key = (comp_name, top)
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        symtab = {op.name: op.type_text for op in self.comps.get(comp_name, [])}
+        for op in self.comps.get(comp_name, []):
+            total.add(self._op_cost(op, symtab, top))
+        self._memo[key] = total
+        return total
+
+    def _operand_bytes(self, op: _Op, symtab: dict) -> int:
+        n = 0
+        for o in op.operands:
+            t = symtab.get(o)
+            if t:
+                n += _shape_bytes(t)
+        return n
+
+    def _op_cost(self, op: _Op, symtab: dict, top: bool) -> Cost:
+        c = Cost()
+        calls = _called_comps(op.raw)
+        if op.opcode == "while":
+            m = _TRIP_RE.search(op.raw)
+            trips = int(m.group(1)) if m else 1
+            if not m:
+                self.unknown_trip_whiles += 1
+            body = calls.get("body")
+            cond = calls.get("condition")
+            if body in self.comps:
+                c.add(self._comp_cost(body, top=top), mult=trips)
+            if cond in self.comps:
+                c.add(self._comp_cost(cond, top=False), mult=trips)
+            return c
+        if op.opcode in ("call", "async-start"):
+            tgt = calls.get("calls") or calls.get("to_apply")
+            if tgt in self.comps:
+                c.add(self._comp_cost(tgt, top=top))
+            return c
+        if op.opcode == "conditional":
+            for b in calls.get("branches", []):
+                if b in self.comps:
+                    c.add(self._comp_cost(b, top=top))
+            return c
+
+        # collectives
+        if op.opcode in _COLLECTIVES:
+            kind = _COLLECTIVES[op.opcode]
+            n = _group_size(op.raw, self.n_devices)
+            payload = _shape_bytes(op.type_text)
+            if kind == "all-reduce":
+                w = 2.0 * (n - 1) / max(n, 1)
+            elif kind == "collective-permute":
+                w = 1.0
+            else:
+                w = (n - 1) / max(n, 1)
+            c.collective[kind]["bytes"] += payload
+            c.collective[kind]["weighted"] += payload * w
+            c.collective[kind]["count"] += 1
+            # per-group-size attribution: group size 2 on the 2-pod mesh is
+            # cross-pod traffic (the slow links)
+            gk = f"{kind}@n{n}"
+            c.collective[gk]["bytes"] += payload
+            c.collective[gk]["weighted"] += payload * w
+            c.collective[gk]["count"] += 1
+            c.traffic_bytes += payload + self._operand_bytes(op, symtab)
+            return c
+
+        # FLOPs (leaf costs below are attributed to this op's named scope;
+        # sub-computation costs were attributed by their own op lines)
+        leaf0_flops, leaf0_traffic = c.flops, c.traffic_bytes
+        if op.opcode == "dot":
+            out_elems = _shape_elems(op.type_text)
+            lhs = symtab.get(op.operands[0]) if op.operands else None
+            contraction = 1
+            mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.raw)
+            if lhs and mdims:
+                shapes = _shape_elems_list(lhs)
+                if shapes:
+                    dims_text = shapes[0][2]
+                    dims = [int(d) for d in dims_text.split(",")] if dims_text else []
+                    for i in mdims.group(1).split(","):
+                        if i.strip() != "" and int(i) < len(dims):
+                            contraction *= dims[int(i)]
+            c.flops += 2.0 * out_elems * contraction
+        elif op.opcode == "convolution":
+            # rare here; approximate 2 * out_elems * (operand0 elems / batch)
+            c.flops += 2.0 * _shape_elems(op.type_text)
+        elif op.opcode == "fusion":
+            tgt = calls.get("calls")
+            if tgt in self.comps:
+                c.add(self._comp_cost(tgt, top=False))
+        elif op.opcode in ("reduce", "reduce-window"):
+            c.flops += self._operand_elems0(op, symtab)
+        elif op.opcode in _ELEMENTWISE:
+            w = 4.0 if op.opcode in _TRANSCENDENTAL else 1.0
+            c.flops += w * _shape_elems(op.type_text)
+
+        # HBM traffic at fusion/materialization boundaries only
+        if top and op.opcode in _TRAFFIC_OPS:
+            if op.opcode == "dynamic-slice":
+                # reads only the slice; the big operand is NOT streamed
+                t = 2 * _shape_bytes(op.type_text)
+            elif op.opcode == "dynamic-update-slice":
+                # in-place: writes only the update region
+                upd = symtab.get(op.operands[1]) if len(op.operands) > 1 else None
+                t = 2 * _shape_bytes(upd) if upd else _shape_bytes(op.type_text)
+            elif op.opcode in ("gather", "scatter"):
+                # reads/writes only the gathered/scattered rows
+                t = 2 * _shape_bytes(op.type_text)
+            elif op.opcode == "fusion":
+                t = self._fusion_traffic(op, symtab, calls.get("calls"))
+            else:
+                t = _shape_bytes(op.type_text) + self._operand_bytes(op, symtab)
+            c.traffic_bytes += t
+            self._note_traffic(op, t)
+
+        # named-scope attribution of this op's leaf costs. For fusion ops the
+        # interior flops were attributed by their own lines; attribute only
+        # the boundary traffic here — but interior lines can't see traffic,
+        # so a fusion whose metadata carries the scope attributes its traffic.
+        leaf_flops = c.flops - leaf0_flops
+        leaf_traffic = c.traffic_bytes - leaf0_traffic
+        if op.opcode == "fusion":
+            leaf_flops = 0.0  # interior lines attributed their own flops
+        if leaf_flops or leaf_traffic:
+            m = _SCOPE_RE.search(op.raw)
+            if m:
+                b = c.buckets[m.group(1)]
+                b["flops"] += leaf_flops
+                b["traffic_bytes"] += leaf_traffic
+        return c
+
+    def _operand_elems0(self, op: _Op, symtab: dict) -> int:
+        if not op.operands:
+            return 0
+        t = symtab.get(op.operands[0])
+        return _shape_elems(t) if t else 0
+
+    # -- fusion operand narrowing ------------------------------------------------
+    _NARROW_OPS = ("dynamic-slice", "gather", "slice")
+
+    def _fusion_traffic(self, op: _Op, symtab: dict, tgt) -> float:
+        """Operands that are only dynamic-sliced / gathered inside the fused
+        computation stream only the slice, not the whole buffer (a scan
+        reading its per-iteration slab of stacked params reads the slab); a
+        root dynamic-update-slice writes only the update region."""
+        called = self.comps.get(tgt, [])
+        if not called:
+            return _shape_bytes(op.type_text) + self._operand_bytes(op, symtab)
+        param_name = {}
+        consumers = defaultdict(list)
+        root = None
+        for cop in called:
+            if cop.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", cop.raw)
+                if m:
+                    param_name[int(m.group(1))] = cop.name
+            for o in cop.operands:
+                consumers[o].append(cop)
+            if "ROOT" in cop.raw:
+                root = cop
+        by_name = {cop.name: cop for cop in called}
+        dus_ops = [cop for cop in called if cop.opcode == "dynamic-update-slice"]
+
+        # follow passthrough chains (convert/bitcast/... inserted around remat
+        # saves) so `param -> convert -> DUS-target` still reads as aliasing
+        PASSTHROUGH = {"convert", "bitcast", "reshape", "copy", "reduce-precision"}
+
+        def terminal_consumers(name, depth=0):
+            outs = []
+            for x in consumers.get(name, []):
+                if x.opcode in PASSTHROUGH and depth < 8:
+                    outs.extend(terminal_consumers(x.name, depth + 1))
+                else:
+                    outs.append((x, name))
+            return outs
+
+        t = 0.0
+        for i, oname in enumerate(op.operands):
+            full = _shape_bytes(symtab.get(oname, ""))
+            pname = param_name.get(i)
+            cons = terminal_consumers(pname) if pname else []
+            if cons and all(
+                (x.opcode == "dynamic-update-slice" and x.operands and x.operands[0] == via)
+                or x.opcode in self._NARROW_OPS
+                for x, via in cons
+            ) and any(x.opcode == "dynamic-update-slice" for x, _ in cons):
+                # in-place update target (possibly also sliced): slices only
+                t += sum(
+                    _shape_bytes(x.type_text)
+                    for x, _ in cons
+                    if x.opcode in self._NARROW_OPS
+                )
+            elif cons and all(x.opcode in self._NARROW_OPS for x, _ in cons):
+                narrow = sum(_shape_bytes(x.type_text) for x, _ in cons)
+                t += min(narrow, full)
+            else:
+                t += full
+
+        # result: if the fusion is an in-place update of a big buffer (a DUS
+        # with the same element count as the fusion result), only the update
+        # region is written.
+        result_elems = _shape_elems(op.type_text)
+        result_bytes = _shape_bytes(op.type_text)
+        matching_dus = [
+            cop for cop in dus_ops if _shape_elems(cop.type_text) == result_elems
+        ]
+        if matching_dus and result_elems:
+            bpe = max(result_bytes // result_elems, 1)
+            upd_bytes = 0
+            for cop in matching_dus:
+                upd = by_name.get(cop.operands[1]) if len(cop.operands) > 1 else None
+                if upd is not None:
+                    upd_bytes += _shape_elems(upd.type_text) * bpe
+            t += upd_bytes if upd_bytes else result_bytes
+        else:
+            t += result_bytes
+        return t
+
+
+def hlo_costs(text: str, n_devices: int) -> dict:
+    model = HloCostModel(text, n_devices)
+    c = model.cost()
+    coll = {
+        k: {kk: float(vv) for kk, vv in v.items()} for k, v in c.collective.items()
+    }
+    return {
+        "flops": c.flops,
+        "traffic_bytes": c.traffic_bytes,
+        "collectives": coll,
+        "collective_bytes": sum(v["bytes"] for k, v in c.collective.items() if "@" not in k),
+        "collective_weighted_bytes": sum(
+            v["weighted"] for k, v in c.collective.items() if "@" not in k
+        ),
+        "unknown_trip_whiles": model.unknown_trip_whiles,
+        "buckets": {k: dict(v) for k, v in c.buckets.items()},
+    }

@@ -1,0 +1,50 @@
+"""Make-mode eval: recompute iff the model (or eval code) changed."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.evalloop import EvalLoop, build_eval_circuit
+from repro.models.registry import build_model, train_loss
+
+
+def test_eval_cache_hits_on_unchanged_model():
+    cfg = get_config("stablelm-1.6b").reduced()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 32), 0, cfg.vocab)
+    eval_batch = {"tokens": toks, "labels": toks}
+
+    calls = []
+
+    def eval_fn(p, batch):
+        calls.append(1)
+        loss, _ = train_loss(model, p, batch)
+        return {"ppl": float(jnp.exp(loss))}
+
+    mgr = build_eval_circuit(eval_fn, eval_batch)
+    loop = EvalLoop(mgr)
+
+    loop.publish(params, step=1)
+    r1 = loop.report()
+    assert r1 is not None and r1["ppl"] > 0
+    assert len(calls) == 1
+
+    # same params re-published (e.g. a restart): cache hit, no forward pass
+    loop.publish(params, step=1)
+    r2 = loop.report()
+    assert len(calls) == 1
+    assert loop.cache_hits >= 1
+    assert r2["ppl"] == r1["ppl"]
+
+    # changed params: recompute
+    params2 = jax.tree.map(lambda x: x * 1.01, params)
+    loop.publish(params2, step=2)
+    r3 = loop.report()
+    assert len(calls) == 2
+    assert r3["ppl"] != r1["ppl"]
+
+    # pulling with nothing new resolves from prior outputs
+    r4 = loop.report()
+    assert len(calls) == 2
+    assert r4["ppl"] == r3["ppl"]

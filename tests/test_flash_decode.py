@@ -1,0 +1,62 @@
+"""flash_decode Pallas kernel vs reference, including ring-buffer layouts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.ref import reference_decode
+
+RNG = np.random.RandomState(0)
+
+
+@pytest.mark.parametrize(
+    "B,S,H,KVH,Dh,window,bkv,nv,qp",
+    [
+        (2, 256, 8, 2, 64, 0, 64, 200, 199),
+        (1, 300, 4, 4, 32, 0, 128, 300, 299),  # ragged S, MHA
+        (2, 128, 4, 1, 64, 48, 32, 100, 99),  # SWA window
+        (1, 64, 8, 2, 64, 0, 32, 10, 9),  # mostly-empty cache
+    ],
+)
+def test_flash_decode_sweep(B, S, H, KVH, Dh, window, bkv, nv, qp):
+    q = jnp.asarray(RNG.randn(B, 1, H, Dh), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, S, KVH, Dh), jnp.float32)
+    v = jnp.asarray(RNG.randn(B, S, KVH, Dh), jnp.float32)
+    kpos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    qpos = jnp.full((B,), qp, jnp.int32)
+    nval = jnp.full((B,), nv, jnp.int32)
+    out = flash_decode(q, k, v, kpos, qpos, nval, window=window, block_kv=bkv)
+    ref = reference_decode(q, k, v, kpos, qpos, nval, window=window)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_ring_positions():
+    """SWA ring buffer: slot order is rotated, positions are explicit."""
+    B, S, H, KVH, Dh, W = 1, 64, 4, 2, 32, 64
+    q = jnp.asarray(RNG.randn(B, 1, H, Dh), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, S, KVH, Dh), jnp.float32)
+    v = jnp.asarray(RNG.randn(B, S, KVH, Dh), jnp.float32)
+    # a ring at absolute time 100: slot i holds position (100 - W + 1 + i)
+    # rotated by 13
+    base = jnp.arange(S) + (100 - W + 1)
+    kpos = jnp.roll(base, 13)[None]
+    qpos = jnp.asarray([100], jnp.int32)
+    nval = jnp.asarray([S], jnp.int32)
+    out = flash_decode(q, k, v, kpos, qpos, nval, window=W, block_kv=16)
+    ref = reference_decode(q, k, v, kpos, qpos, nval, window=W)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_bf16():
+    B, S, H, KVH, Dh = 1, 128, 4, 2, 64
+    q = jnp.asarray(RNG.randn(B, 1, H, Dh)).astype(jnp.bfloat16)
+    k = jnp.asarray(RNG.randn(B, S, KVH, Dh)).astype(jnp.bfloat16)
+    v = jnp.asarray(RNG.randn(B, S, KVH, Dh)).astype(jnp.bfloat16)
+    kpos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    out = flash_decode(q, k, v, kpos, jnp.asarray([127]), jnp.asarray([128]))
+    ref = reference_decode(q, k, v, kpos, jnp.asarray([127]), jnp.asarray([128]))
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), rtol=2e-2, atol=2e-2
+    )
