@@ -15,16 +15,11 @@ import time
 
 import numpy as np
 
-from repro.core import (
-    Pipeline,
-    PipelineManager,
-    SmartTask,
-    SnapshotPolicy,
-    ghost_run,
-)
+from repro.core import SnapshotPolicy
+from repro.workspace import Workspace
 
 
-def _mlp_pipeline(heavy_ms: float = 0.0):
+def _mlp_workspace(heavy_ms: float = 0.0, cache=None) -> Workspace:
     def stage_a(x):
         if heavy_ms:
             time.sleep(heavy_ms / 1e3)
@@ -35,11 +30,11 @@ def _mlp_pipeline(heavy_ms: float = 0.0):
             time.sleep(heavy_ms / 1e3)
         return {"z": y.sum(axis=0)}
 
-    pipe = Pipeline("bench")
-    pipe.add_task(SmartTask("a", stage_a, ["x"], ["y"]))
-    pipe.add_task(SmartTask("b", stage_b, ["y"], ["z"]))
-    pipe.connect("a", "y", "b", "y")
-    return pipe
+    ws = Workspace("bench", cache=cache)
+    a = ws.task(stage_a, name="a", inputs=["x"], outputs=["y"])
+    b = ws.task(stage_b, name="b", inputs=["y"], outputs=["z"])
+    a["y"] >> b["y"]
+    return ws
 
 
 def bench_metadata_overhead():
@@ -47,7 +42,7 @@ def bench_metadata_overhead():
     out = {}
     for size_kb in (64, 1024, 16384):
         payload = np.zeros((size_kb * 1024 // 4,), np.float32)
-        mgr = PipelineManager(_mlp_pipeline())
+        mgr = _mlp_workspace()
         # reshape so the pipeline does real work
         n = int(np.sqrt(payload.size))
         t0 = time.perf_counter()
@@ -67,7 +62,7 @@ def bench_cache_reuse():
     """Re-pushing unchanged inputs: executions avoided via content cache."""
     results = {}
     for pushes in (10,):
-        mgr = PipelineManager(_mlp_pipeline(heavy_ms=5.0))
+        mgr = _mlp_workspace(heavy_ms=5.0)
         x = np.random.RandomState(0).randn(64, 64)
         t0 = time.perf_counter()
         for _ in range(pushes):
@@ -76,7 +71,7 @@ def bench_cache_reuse():
         stats = mgr.stats()
         execs = sum(t["executions"] for t in stats["tasks"].values())
         hits = sum(t["cache_hits"] for t in stats["tasks"].values())
-        mgr2 = PipelineManager(_mlp_pipeline(heavy_ms=5.0), cache=False)
+        mgr2 = _mlp_workspace(heavy_ms=5.0, cache=False)
         t0 = time.perf_counter()
         for _ in range(pushes):
             mgr2.push("a", x=x)
@@ -93,7 +88,7 @@ def bench_cache_reuse():
 
 def bench_transport_avoidance():
     """Links carry ~100-byte AVs while payloads stay in the store."""
-    mgr = PipelineManager(_mlp_pipeline())
+    mgr = _mlp_workspace()
     x = np.random.RandomState(0).randn(512, 512)  # 2 MB
     mgr.push("a", x=x)
     total_payload = sum(
@@ -185,17 +180,12 @@ def bench_wireframe():
     def heavy(x):
         return {"y": jnp.tanh(x @ x) @ x}
 
-    pipe = Pipeline("wf")
-    pipe.add_task(SmartTask("h", heavy, ["x"], ["y"]))
-    pipe.add_task(SmartTask("s", lambda y: {"z": y.sum()}, ["y"], ["z"]))
-    pipe.connect("h", "y", "s", "y")
-
-    mgr = PipelineManager(pipe)
+    mgr = _rebuild_wf(heavy)
     t0 = time.perf_counter()
-    report = ghost_run(mgr, {("h", "x"): jax.ShapeDtypeStruct((1024, 1024), jnp.float32)})
+    report = mgr.ghost({("h", "x"): jax.ShapeDtypeStruct((1024, 1024), jnp.float32)})
     ghost_s = time.perf_counter() - t0
 
-    mgr2 = PipelineManager(_rebuild_wf(heavy))
+    mgr2 = _rebuild_wf(heavy)
     x = jnp.asarray(np.random.RandomState(0).randn(1024, 1024), jnp.float32)
     t0 = time.perf_counter()
     mgr2.push("h", x=x)
@@ -208,12 +198,12 @@ def bench_wireframe():
     }
 
 
-def _rebuild_wf(heavy):
-    pipe = Pipeline("wf2")
-    pipe.add_task(SmartTask("h", heavy, ["x"], ["y"]))
-    pipe.add_task(SmartTask("s", lambda y: {"z": y.sum()}, ["y"], ["z"]))
-    pipe.connect("h", "y", "s", "y")
-    return pipe
+def _rebuild_wf(heavy) -> Workspace:
+    ws = Workspace("wf")
+    h = ws.task(heavy, name="h", inputs=["x"], outputs=["y"])
+    sm = ws.task(lambda y: {"z": y.sum()}, name="s", inputs=["y"], outputs=["z"])
+    h["y"] >> sm["y"]
+    return ws
 
 
 ALL = {

@@ -1,15 +1,16 @@
-"""Quickstart: the Koalja layer in 60 lines.
+"""Quickstart: the Koalja Workspace in 60 lines.
 
-Builds the paper's fig. 5 circuit from the wiring language, pushes data
-through it reactively, pulls a target make-style (watch the cache hits), and
-prints all three provenance stories for the final artifact.
+Builds the paper's fig. 5 circuit from the wiring DSL (one constructor),
+pushes data through it reactively, pulls a target make-style (watch the
+cache hits), and prints all three provenance stories for the final artifact
+— all from one typed entry point.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import PipelineManager, parse_wiring
+from repro.workspace import Workspace
 
 # --- plugin user code (what a Koalja user writes) ---------------------------
 
@@ -42,39 +43,40 @@ WIRING = """
 
 
 def main():
-    pipe = parse_wiring(
+    ws = Workspace.from_wiring(
         WIRING,
         {"learn-tf": learn_tf, "server": server, "convert": convert, "predict": predict},
         modes={"predict": "swap_new_for_old"},
     )
-    mgr = PipelineManager(pipe)
 
     # reactive mode: sensor samples arrive at the edge
     rng = np.random.RandomState(0)
     for step in range(14):
         sample = rng.randn(8)
-        mgr.push("learn-tf", **{"in": sample})
-        mgr.push("convert", **{"in": sample})
+        ws.push("learn-tf", **{"in": sample})
+        ws.push("convert", **{"in": sample})
 
-    result_av = pipe.tasks["predict"].last_outputs["result"]
-    print("result:", mgr.value_of(result_av))
+    # result-oriented: name the target, get the payload (make semantics)
+    result = ws.pull("predict")
+    print("result:", result["result"])
 
-    # make mode: pulling again with nothing new -> cache hits, no recompute
-    execs_before = {n: t.executions for n, t in pipe.tasks.items()}
-    mgr.pull("predict")
-    assert {n: t.executions for n, t in pipe.tasks.items()} == execs_before
+    # pulling again with nothing new -> cache hits, no recompute
+    execs_before = {n: t.executions for n, t in ws.pipeline.tasks.items()}
+    ws.pull("predict")
+    assert {n: t.executions for n, t in ws.pipeline.tasks.items()} == execs_before
     print("pull with no new data: zero re-executions (make semantics)")
 
-    # the three stories (paper §III.C)
+    # the three stories (paper §III.C), straight off the result handle
+    result_av = result.av("result")
     print("\n--- story 1: traveller log of the result artifact ---")
-    for stamp in mgr.registry.traveller_log(result_av.uid):
+    for stamp in ws.traveller_log(result_av):
         print(f"  {stamp['task']:>10s} {stamp['event']:<9s} sw={stamp['software_version']}")
     print("\n--- story 2: checkpoint visitor log (predict) ---")
-    for v in mgr.registry.visitor_log("predict")[-4:]:
+    for v in ws.visitor_log("predict")[-4:]:
         print(f"  {v['event']:<9s} av={v['av_uid']} {v['note']}")
     print("\n--- story 3: design map ---")
-    print(mgr.registry.design_map_text())
-    print("\nmetadata overhead:", mgr.registry.overhead_bytes(), "bytes")
+    print(ws.design_map_text())
+    print("\nmetadata overhead:", ws.registry.overhead_bytes(), "bytes")
 
 
 if __name__ == "__main__":

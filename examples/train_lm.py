@@ -1,6 +1,6 @@
 """End-to-end example: train a ~100M-param dense LM for a few hundred steps
-on CPU with the full stack — Koalja data circuit, provenance, checkpoints,
-fault-tolerant resume.
+on CPU with the full stack — Workspace data circuit, MeshExecutor-built
+train step, provenance, checkpoints, fault-tolerant resume.
 
 ~100M params: stablelm family at d_model=512, 8 layers, vocab 100352
 (vocab embedding dominates: ~51M embed + ~51M head + 25M body ≈ 128M).
@@ -11,7 +11,6 @@ fault-tolerant resume.
 
 import argparse
 import dataclasses
-import sys
 
 from repro.configs import get_config
 from repro.launch import train as train_driver
@@ -42,8 +41,6 @@ def main(argv=None):
     )
     print(f"training {cfg100m.name}: {cfg100m.n_params()/1e6:.0f}M params")
     # monkey-register so the driver can find it
-    import repro.models.registry as registry
-
     orig_get = configs.get_config
     configs.get_config = lambda a: cfg100m if a == "stablelm-100m" else orig_get(a)
     train_driver.get_config = configs.get_config

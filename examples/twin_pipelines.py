@@ -1,33 +1,35 @@
-"""Paper fig. 6: twin pipelines — a training circuit publishes model-state
-artifacts; a serving circuit consults the latest published model through an
+"""Paper fig. 6: twin pipelines — a training workspace publishes model-state
+artifacts; a serving workspace consults the latest published model through an
 implicit client-server link. The two circuits run on unrelated timescales.
 
 Here the "model" is a real (reduced) stablelm trained for a few steps with
-the full JAX substrate; the serving pipeline classifies token streams with
-greedy decoding against whichever model version is newest.
+the full JAX substrate; the serving workspace classifies token streams with
+greedy decoding against whichever model version is newest. Both circuits are
+declared on the typed Workspace breadboard and wired with ports.
 
   PYTHONPATH=src python examples/twin_pipelines.py
 """
+
+import itertools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import Pipeline, PipelineManager, ServiceCall, SmartTask
 from repro.data.pipeline import synthetic_batch
 from repro.models.registry import build_model, greedy_generate, train_loss
 from repro.optim import adamw_init, adamw_update, constant_lr
+from repro.workspace import Workspace, service
 
 
 def main():
     cfg = get_config("stablelm-1.6b").reduced()
     model = build_model(cfg)
 
-    # ---------------- upper pipeline: train ---------------------------------
+    # ---------------- upper workspace: train --------------------------------
     params, _ = model.init(jax.random.key(0))
-    opt = adamw_init(params)
-    state = {"params": params, "opt": opt}
+    state = {"params": params, "opt": adamw_init(params)}
     published = {}  # the model registry the serving side consults
 
     @jax.jit
@@ -44,22 +46,17 @@ def main():
         published["latest"] = (version, state["params"])
         return {"model_ref": {"version": version, "loss": float(l)}}
 
-    import itertools
-
     tick = itertools.count()
-    train_pipe = Pipeline("train")
-    train_pipe.add_task(
-        SmartTask(
-            "sample",
-            lambda: {"batch": synthetic_batch(cfg, 4, 32, step=next(tick))},
-            inputs=[], outputs=["batch"], source=True,
-        )
+    trainer = Workspace("train")
+    sample = trainer.source(
+        lambda: {"batch": synthetic_batch(cfg, 4, 32, step=next(tick))},
+        name="sample",
+        outputs=["batch"],
     )
-    train_pipe.add_task(SmartTask("train", train_task, ["batch"], ["model_ref"]))
-    train_pipe.connect("sample", "batch", "train", "batch")
-    trainer = PipelineManager(train_pipe)
+    train = trainer.task(train_task, name="train", inputs=["batch"], outputs=["model_ref"])
+    sample["batch"] >> train["batch"]
 
-    # ---------------- lower pipeline: serve ---------------------------------
+    # ---------------- lower workspace: serve --------------------------------
     def model_lookup():  # the implicit client-server edge of fig. 6
         return published["latest"]
 
@@ -68,27 +65,23 @@ def main():
         toks = greedy_generate(model, p, jnp.asarray(request), n_steps=4, max_len=64)
         return {"label": {"model_version": version, "tokens": toks.tolist()}}
 
-    serve_pipe = Pipeline("serve")
-    serve_pipe.add_task(
-        SmartTask(
-            "recognize",
-            recognize,
-            ["request"],
-            ["label"],
-            services={"model_service": ServiceCall("model_lookup", model_lookup)},
-        )
+    server = Workspace("serve")
+    rec = server.task(
+        recognize,
+        name="recognize",
+        inputs=["request"],
+        outputs=["label"],
+        services={"model_service": service("model_lookup", model_lookup)},
     )
-    server = PipelineManager(serve_pipe)
+    server.implicit("model_lookup", rec)
 
     # ---------------- interleaved timescales --------------------------------
     rng = np.random.RandomState(1)
     for round_ in range(3):
-        trainer.sample("sample")  # slow pipeline ticks
-        trainer.sample("sample")
+        trainer.sample(sample)  # slow pipeline ticks
+        trainer.sample(sample)
         req = rng.randint(0, cfg.vocab, size=(1, 8))
-        fired = server.push("recognize", request=req)
-        label_av = fired["recognize"][-1]["label"]
-        label = server.value_of(label_av)
+        label = server.push(rec, request=req)["recognize"]["label"]
         print(
             f"round {round_}: served with model v{label['model_version']} "
             f"-> {label['tokens'][0]}"
@@ -96,11 +89,11 @@ def main():
 
     # forensic traceability: the served artifact's lineage names the frozen
     # service response (which model version answered) — paper §III.D
-    svc = serve_pipe.tasks["recognize"].services["model_service"]
+    svc = server.pipeline.tasks["recognize"].services["model_service"]
     print(f"\nfrozen service responses: {len(svc.frozen_responses)}")
     print("last:", {k: v for k, v in svc.frozen_responses[-1].items() if k != "timestamp"})
     print("\nserve visitor log:")
-    for v in server.registry.visitor_log("recognize")[-3:]:
+    for v in server.visitor_log(rec)[-3:]:
         print(" ", v["event"], v["av_uid"], v["note"])
 
 

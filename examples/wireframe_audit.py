@@ -1,10 +1,11 @@
-"""Wireframing + region audit (paper §III.K / §IV).
+"""Wireframing + region audit (paper §III.K / §IV) on the Workspace API.
 
-Sends ghost batches (ShapeDtypeStructs) through a multi-region data circuit
-to expose where data WOULD be routed before any real data moves — then runs
-real data and audits region crossings from the travel documents, including a
-fenced link that refuses to carry EU-origin artifacts ("US data cannot leave
-the US" enforced and auditable).
+Sends ghost batches (ShapeDtypeStructs) through a multi-region workspace to
+expose where data WOULD be routed before any real data moves — then runs
+real data and audits region crossings from the travel documents, including
+a fenced wire that refuses to carry EU-origin artifacts ("US data cannot
+leave the US" enforced and auditable). Link policy is set fluently on the
+wires: ``(a["s"] >> b["t"]).region("us").fence("eu")``.
 
   PYTHONPATH=src python examples/wireframe_audit.py
 """
@@ -13,62 +14,54 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    Pipeline,
-    PipelineManager,
-    RegionFenceError,
-    SmartTask,
-    ghost_run,
-)
+from repro.core import RegionFenceError
+from repro.workspace import Workspace
 
 
-def build_circuit():
-    pipe = Pipeline("multi_region")
-    pipe.add_task(
-        SmartTask("eu_sensor", lambda x: {"eu_raw": x}, ["x"], ["eu_raw"], region="eu")
+def build_workspace(with_exfil: bool = False) -> Workspace:
+    ws = Workspace("multi_region")
+    sensor = ws.task(
+        lambda x: {"eu_raw": x}, name="eu_sensor", inputs=["x"], outputs=["eu_raw"],
+        region="eu",
     )
-    pipe.add_task(
-        SmartTask(
-            "eu_summarize",
-            lambda eu_raw: {"summary": jnp.mean(eu_raw, axis=0)},
-            ["eu_raw"],
-            ["summary"],
-            region="eu",
-        )
+    summarize = ws.task(
+        lambda eu_raw: {"summary": jnp.mean(eu_raw, axis=0)},
+        name="eu_summarize", inputs=["eu_raw"], outputs=["summary"], region="eu",
     )
-    pipe.add_task(
-        SmartTask(
-            "hq_aggregate",
-            lambda summary: {"report": jnp.sum(summary)},
-            ["summary"],
-            ["report"],
-            region="us",
-        )
+    aggregate = ws.task(
+        lambda summary: {"report": jnp.sum(summary)},
+        name="hq_aggregate", inputs=["summary"], outputs=["report"], region="us",
     )
-    pipe.connect("eu_sensor", "eu_raw", "eu_summarize", "eu_raw", region="eu")
+    (sensor["eu_raw"] >> summarize["eu_raw"]).region("eu")
     # only summaries cross the region boundary (transport avoidance, §IV)
-    pipe.connect("eu_summarize", "summary", "hq_aggregate", "summary", region="us")
-    return pipe
+    (summarize["summary"] >> aggregate["summary"]).region("us")
+    if with_exfil:
+        exfil = ws.task(
+            lambda eu_raw: {"out": eu_raw}, name="exfil", inputs=["eu_raw"],
+            outputs=["out"], region="offshore",
+        )
+        (sensor["eu_raw"] >> exfil["eu_raw"]).region("offshore").fence("eu")
+    return ws
 
 
 def main():
     # 1. wireframe: ghost batches expose routing, zero FLOPs moved
-    mgr = PipelineManager(build_circuit())
-    report = ghost_run(
-        mgr, {("eu_sensor", "x"): jax.ShapeDtypeStruct((1024, 1024), jnp.float32)}
+    ws = build_workspace()
+    report = ws.ghost(
+        {ws["eu_sensor"]["x"]: jax.ShapeDtypeStruct((1024, 1024), jnp.float32)}
     )
     print("ghost routing ('trust, but verify' before real data):")
     for route, info in report["routes"].items():
         print(f"  {route}: carried {info['carried']} AV(s)")
 
     # 2. real run + region audit from travel documents
-    mgr2 = PipelineManager(build_circuit())
-    fired = mgr2.push("eu_sensor", x=np.random.RandomState(0).randn(1024, 1024))
-    report_av = fired["hq_aggregate"][-1]["report"]
-    lineage = mgr2.registry.lineage(report_av.uid)
+    ws2 = build_workspace()
+    fired = ws2.push("eu_sensor", x=np.random.RandomState(0).randn(1024, 1024))
+    report_av = fired["hq_aggregate"].av("report")
+    lineage = ws2.lineage(report_av)
 
     def walk(node, depth=0):
-        av = mgr2.registry.get_av(node["uid"])
+        av = ws2.registry.get_av(node["uid"])
         crossings = av.crossed_regions()
         print(
             f"  {'  '*depth}{node['source_task']:<14s} {node['uid']}"
@@ -80,20 +73,12 @@ def main():
     print("\nregion audit of the HQ report's lineage:")
     walk(lineage)
 
-    # 3. fencing: a link that refuses EU payloads
-    pipe3 = build_circuit()
-    pipe3.add_task(
-        SmartTask("exfil", lambda eu_raw: {"out": eu_raw}, ["eu_raw"], ["out"], region="offshore")
-    )
-    pipe3.connect(
-        "eu_sensor", "eu_raw", "exfil", "eu_raw",
-        region="offshore", fenced_regions=("eu",),
-    )
-    mgr3 = PipelineManager(pipe3)
+    # 3. fencing: a wire that refuses EU payloads
+    ws3 = build_workspace(with_exfil=True)
     try:
-        mgr3.push("eu_sensor", x=np.ones((4, 4)))
+        ws3.push("eu_sensor", x=np.ones((4, 4)))
     except RegionFenceError as e:
-        print(f"\nfenced link refused the transfer:\n  {e}")
+        print(f"\nfenced wire refused the transfer:\n  {e}")
 
 
 if __name__ == "__main__":

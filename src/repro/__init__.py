@@ -1,3 +1,22 @@
-"""repro: Koalja-JAX — provenance-first data circuitry for multi-pod TPU ML."""
+"""repro: Koalja-JAX — provenance-first data circuitry for multi-pod TPU ML.
 
-__version__ = "0.1.0"
+Public entry point: ``from repro import Workspace`` (lazy import — the
+circuit layer loads without pulling in JAX model code until needed).
+"""
+
+__version__ = "0.2.0"
+
+_LAZY = {
+    "Workspace": ("repro.workspace", "Workspace"),
+    "InlineExecutor": ("repro.workspace", "InlineExecutor"),
+    "MeshExecutor": ("repro.workspace", "MeshExecutor"),
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        mod, attr = _LAZY[name]
+        return getattr(importlib.import_module(mod), attr)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -16,7 +16,7 @@ from .provenance import ProvenanceRegistry
 from .store import ArtifactStore
 from .task import ServiceCall, SmartTask, software_version_of
 from .wireframe import GhostValue, ghost_run
-from .wiring import parse_wiring
+from .wiring import build_wiring, parse_wiring
 
 __all__ = [
     "AnnotatedValue", "Stamp", "content_hash",
@@ -27,5 +27,5 @@ __all__ = [
     "InputSpec", "SnapshotPolicy",
     "ProvenanceRegistry", "ArtifactStore",
     "ServiceCall", "SmartTask", "software_version_of",
-    "GhostValue", "ghost_run", "parse_wiring",
+    "GhostValue", "ghost_run", "build_wiring", "parse_wiring",
 ]

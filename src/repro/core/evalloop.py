@@ -33,7 +33,7 @@ def build_eval_circuit(
         metrics = eval_fn(checkpoint["params"], eval_batch)
         return {"report": {"step": checkpoint.get("step", -1), **metrics}}
 
-    pipe.add_task(
+    pipe._add_task(
         SmartTask(name, run_eval, inputs=["checkpoint"], outputs=["report"],
                   mode="swap_new_for_old")
     )
@@ -48,13 +48,13 @@ class EvalLoop:
         self.name = name
 
     def publish(self, params, step: int):
-        self.manager.inject(self.name, "checkpoint", {"params": params, "step": step})
+        self.manager._inject(self.name, "checkpoint", {"params": params, "step": step})
 
     def report(self) -> Optional[dict]:
         task = self.manager.pipeline.tasks[self.name]
         task.ingest()
         if task.ready() or task.last_outputs:
-            out = self.manager.pull(self.name)
+            out = self.manager._pull(self.name)
             return self.manager.value_of(out["report"])
         return None
 

@@ -16,6 +16,7 @@ rate-controlled rather than topology-restricted.
 
 from __future__ import annotations
 
+import warnings
 from typing import Any, Optional
 
 from .av import AnnotatedValue, content_hash
@@ -26,21 +27,49 @@ from .store import ArtifactStore
 from .task import SmartTask
 
 
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use {new} — see repro.workspace.Workspace",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 class Pipeline:
-    """The wiring diagram: tasks and the links between them."""
+    """The wiring diagram: tasks and the links between them.
+
+    This class is the *engine* behind :class:`repro.workspace.Workspace`;
+    the direct ``add_task``/``connect`` surface is deprecated in favour of
+    the typed facade (``ws.task(...)``, ``src["out"] >> dst["in"]``)."""
 
     def __init__(self, name: str = "pipeline") -> None:
         self.name = name
         self.tasks: dict = {}
         self.links: list = []
+        self.implicit_edges: list = []
 
     def add_task(self, task: SmartTask) -> SmartTask:
+        _deprecated("Pipeline.add_task", "Workspace.task(...)")
+        return self._add_task(task)
+
+    def _add_task(self, task: SmartTask) -> SmartTask:
         if task.name in self.tasks:
             raise ValueError(f"duplicate task {task.name}")
         self.tasks[task.name] = task
         return task
 
     def connect(
+        self,
+        src: str,
+        output: str,
+        dst: str,
+        dst_input: str,
+        **link_kwargs: Any,
+    ) -> SmartLink:
+        _deprecated("Pipeline.connect", 'src["out"] >> dst["in"]')
+        return self._connect(src, output, dst, dst_input, **link_kwargs)
+
+    def _connect(
         self,
         src: str,
         output: str,
@@ -109,6 +138,10 @@ class PipelineManager:
 
     # -- external data entry (edge sampling) -----------------------------------
     def inject(self, task: str, input_name: str, payload: Any, region: str = "local"):
+        _deprecated("PipelineManager.inject", "Workspace.inject(...)")
+        return self._inject(task, input_name, payload, region=region)
+
+    def _inject(self, task: str, input_name: str, payload: Any, region: str = "local"):
         """Edge-node sampling: wrap an external payload as an AV and deliver it
         to a task input ('data are intentionally sampled by the edge nodes')."""
         uri, chash = self.store.put(payload)
@@ -119,14 +152,59 @@ class PipelineManager:
         t.policy.arrive(input_name, av)
         return av
 
+    def _emit_external(self, task: str, output: str, payload: Any, region: str = "local"):
+        """Emit a payload *as* a source task's output ('the camera saw this
+        image'). Restricted to sensors: letting arbitrary tasks emit
+        externally-supplied payloads would let forged artifacts carry
+        authentic-looking travel documents. The AV is marked external."""
+        t = self.pipeline.tasks[task]
+        if not t.source:
+            raise ValueError(
+                f"cannot emit {output!r} on non-source task {task!r}: "
+                f"output-emission push is sensor semantics; wire data into "
+                f"an input instead"
+            )
+        uri, chash = self.store.put(payload)
+        av = AnnotatedValue.produce(
+            chash, uri, t.name, t.version, region=region, meta={"external": True}
+        )
+        self.registry.register_av(av)
+        self.registry.log_visit(t.name, av.uid, "emitted", t.version, note="external")
+        t._emit({output: av})
+        return av
+
     # -- reactive (push) mode ----------------------------------------------------
     def push(self, task: str, region: str = "local", **payloads: Any) -> dict:
-        """Inject payloads into task inputs and propagate downstream."""
+        _deprecated("PipelineManager.push", "Workspace.push(...)")
+        return self._push(task, region=region, **payloads)
+
+    def _push(self, task: str, region: str = "local", **payloads: Any) -> dict:
+        """Deliver payloads and propagate downstream. A payload named after a
+        task *input* is injected there; one named after an *output* is
+        emitted as that output (sensor semantics for source tasks)."""
+        t = self.pipeline.tasks[task]
+        input_names = {s.name for s in t.input_specs}
+        emitted: list = []
         for iname, payload in payloads.items():
-            self.inject(task, iname, payload, region=region)
-        return self.propagate()
+            if iname in input_names:
+                self._inject(task, iname, payload, region=region)
+            elif iname in t.outputs:
+                emitted.append({iname: self._emit_external(task, iname, payload, region)})
+            else:
+                raise KeyError(
+                    f"task {task!r} has no input or output named {iname!r} "
+                    f"(inputs={sorted(input_names)}, outputs={t.outputs})"
+                )
+        fired = self.propagate()
+        if emitted:
+            fired[task] = emitted + fired.get(task, [])
+        return fired
 
     def sample(self, source_task: str) -> dict:
+        _deprecated("PipelineManager.sample", "Workspace.sample(...)")
+        return self._sample(source_task)
+
+    def _sample(self, source_task: str) -> dict:
         """Fire a source task once (sample its sensor) and propagate."""
         t = self.pipeline.tasks[source_task]
         if not t.source:
@@ -154,6 +232,10 @@ class PipelineManager:
 
     # -- make (pull) mode -----------------------------------------------------------
     def pull(self, target: str, _visiting: Optional[set] = None) -> dict:
+        _deprecated("PipelineManager.pull", "Workspace.pull(...)")
+        return self._pull(target, _visiting)
+
+    def _pull(self, target: str, _visiting: Optional[set] = None) -> dict:
         """Request the target task's outputs, rebuilding dependencies
         backwards recursively. Unchanged subtrees resolve as cache hits."""
         _visiting = _visiting if _visiting is not None else set()
@@ -162,7 +244,7 @@ class PipelineManager:
         _visiting.add(target)
         t = self.pipeline.tasks[target]
         for link in t.in_links.values():
-            self.pull(link.src_task, _visiting)
+            self._pull(link.src_task, _visiting)
         t.ingest()
         if t.ready():
             return t.execute(self.store, self.registry, self.cache)

@@ -80,10 +80,10 @@ def ghost_run(
         for (task, iname), spec in injections.items():
             specs = spec if isinstance(spec, list) else [spec]
             for s in specs:
-                manager.inject(task, iname, s)
+                manager._inject(task, iname, s)
         manager.propagate()
         for target in pulls or []:
-            manager.pull(target)
+            manager._pull(target)
     finally:
         for t in pipe.tasks.values():
             t.fn = originals[t.name]

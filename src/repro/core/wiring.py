@@ -38,7 +38,21 @@ def parse_wiring(
     default_mode: str = "all_new",
     modes: Optional[dict] = None,
 ) -> Pipeline:
-    """Build a Pipeline from a wiring description.
+    """Deprecated entry point — use ``Workspace.from_wiring(text, impls)``
+    (repro.workspace), which wraps the same parser behind the typed facade."""
+    from .pipeline import _deprecated
+
+    _deprecated("parse_wiring", "Workspace.from_wiring(text, impls)")
+    return build_wiring(text, impls, default_mode=default_mode, modes=modes)
+
+
+def build_wiring(
+    text: str,
+    impls: dict,
+    default_mode: str = "all_new",
+    modes: Optional[dict] = None,
+) -> Pipeline:
+    """Build a Pipeline from a wiring description (the parsing engine).
 
     impls: task name -> python callable (the plugin user code).
     modes: optional per-task snapshot mode overrides.
@@ -81,7 +95,7 @@ def parse_wiring(
             mode=modes.get(tname, default_mode),
             source=(len(wires) == 0),
         )
-        pipe.add_task(task)
+        pipe._add_task(task)
         implicit_inputs[tname] = implicits
 
     # wire matching output names to input names across tasks
@@ -96,7 +110,7 @@ def parse_wiring(
             port = InputSpec.parse(tok).name
             for src in producers.get(port, []):
                 if src != tname:
-                    pipe.connect(src, port, tname, port)
+                    pipe._connect(src, port, tname, port)
     # implicit client-server edges recorded in the design map via link-less note
     pipe.implicit_edges = [
         (svc, tname) for tname, svcs in implicit_inputs.items() for svc in svcs

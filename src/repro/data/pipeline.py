@@ -1,14 +1,15 @@
-"""Training data pipeline as Koalja circuitry.
+"""Training data pipeline as a Koalja Workspace.
 
-The stages — sample -> tokenize/pack -> batch -> shard — are SmartTasks wired
-by SmartLinks, so every training batch is an AnnotatedValue whose travel
-document names the source shard, the packing code version, and the batch
-content hash. A checkpoint restored at step N can therefore name exactly
-which data batches went into it (forensic reconstruction, paper §III.C).
+The stages — sample -> tokenize/pack -> batch — are declared on the typed
+:class:`repro.workspace.Workspace` breadboard and wired with ports, so every
+training batch is an AnnotatedValue whose travel document names the source
+shard, the packing code version, and the batch content hash. A checkpoint
+restored at step N can therefore name exactly which data batches went into
+it (forensic reconstruction, paper §III.C).
 
 The generator is synthetic (deterministic per (seed, step): a Zipf-ish token
 sampler) — the "sensor at the edge". Real deployments drop a loader into the
-`sample` SmartTask; the wiring does not change.
+`sample` task; the wiring does not change.
 """
 
 from __future__ import annotations
@@ -17,8 +18,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core import Pipeline, PipelineManager, SmartTask
 from repro.models.common import ArchConfig
+from repro.workspace import Workspace
 
 
 def synthetic_batch(
@@ -65,11 +66,14 @@ def build_data_pipeline(
     seq_len: int,
     seed: int = 0,
     rows_per_pack: Optional[int] = None,
-) -> PipelineManager:
-    """sample -> pack -> batch wired as a Koalja circuit.
+) -> Workspace:
+    """sample -> pack -> batch declared as a Workspace circuit.
 
-    Pull `manager.pull("batch")` for make-mode (backpressure: sampling happens
-    on demand); or `manager.sample("sample")` repeatedly for reactive mode.
+    Drive it with ``next_batch(ws, cfg)`` (samples the source until a fresh
+    batch AV lands) or ``ws.sample("sample")`` for single reactive ticks.
+    A lone ``ws.pull("batch")`` cannot fill the ``doc[4]``/``panel[N]``
+    buffers — one pull fires the sensor once — so pull only resolves after
+    the circuit has produced a batch (it then returns the cached artifact).
     """
     src = TokenSource(cfg, seq_len, seed)
     rows = rows_per_pack or max(1, global_batch // 8)
@@ -93,27 +97,26 @@ def build_data_pipeline(
             full = np.concatenate([full, full], axis=0)[:global_batch]
         return {"batch": {"tokens": full[:, :-1], "labels": full[:, 1:].copy()}}
 
-    pipe = Pipeline("data")
-    pipe.add_task(SmartTask("sample", sample, inputs=[], outputs=["doc"], source=True))
-    # pack buffers 4 docs per panel; batch swaps-new-for-old so a slow source
-    # still lets training proceed on the freshest full panel set
-    pipe.add_task(SmartTask("pack", pack, inputs=["doc[4]"], outputs=["panel"]))
+    ws = Workspace("data")
+    sample_t = ws.source(sample, name="sample", outputs=["doc"])
+    # pack buffers 4 docs per panel; batch consumes n_panels fresh panels
     n_panels = max(1, global_batch // rows)
-    pipe.add_task(
-        SmartTask("batch", batch, inputs=[f"panel[{n_panels}]"], outputs=["batch"])
+    pack_t = ws.task(pack, name="pack", inputs=["doc"], outputs=["panel"]).buffer(4)
+    batch_t = ws.task(batch, name="batch", inputs=["panel"], outputs=["batch"]).buffer(
+        n_panels
     )
-    pipe.connect("sample", "doc", "pack", "doc")
-    pipe.connect("pack", "panel", "batch", "panel")
-    return PipelineManager(pipe)
+    sample_t["doc"] >> pack_t["doc"]
+    pack_t["panel"] >> batch_t["panel"]
+    return ws
 
 
-def next_batch(manager: PipelineManager, cfg: ArchConfig) -> dict:
+def next_batch(ws: Workspace, cfg: ArchConfig) -> dict:
     """Drive the circuit until a fresh batch AV is produced; return payload."""
-    task = manager.pipeline.tasks["batch"]
+    task = ws.pipeline.tasks["batch"]
     before = task.last_outputs.get("batch")
     for _ in range(64):
-        manager.sample("sample")
+        ws.sample("sample")
         out = task.last_outputs.get("batch")
         if out is not None and out is not before:
-            return manager.value_of(out)
+            return ws.value_of(out)
     raise RuntimeError("data pipeline did not produce a batch")

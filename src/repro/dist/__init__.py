@@ -1,0 +1,36 @@
+"""Distribution layer: logical-axis sharding rules, jitted train/serve step
+builders, fault tolerance, and elastic resharding.
+
+This package is the bridge between the model substrate (``repro.models``,
+pure functions with logical-axis annotations) and a concrete JAX mesh. The
+Koalja framing: the mesh is the underlay, and this layer is what makes it
+transparent — the same circuit runs on a laptop host mesh or a multi-pod
+production mesh because only the rules change, never the model code.
+
+  - :mod:`repro.dist.sharding` — logical axis name -> mesh axis rules per
+    (arch, mode), PartitionSpec derivation with divisibility fallbacks.
+  - :mod:`repro.dist.step` — ``make_train_step`` / ``make_serve_fns``:
+    donated, sharded, jitted step functions plus their shape/shard trees.
+  - :mod:`repro.dist.ft` — heartbeat-based fault tolerance (stragglers,
+    dead hosts, simulated failures, restore-and-replay).
+  - :mod:`repro.dist.elastic` — reshard a train state onto a new mesh.
+"""
+
+from .elastic import reshard_state
+from .ft import FaultToleranceManager, SimulatedFailure
+from .sharding import cache_logical_axes, make_rules, pspec_for_axes, shardings_for
+from .step import (
+    make_batch_specs,
+    make_serve_fns,
+    make_train_state_specs,
+    make_train_step,
+    param_specs,
+)
+
+__all__ = [
+    "reshard_state",
+    "FaultToleranceManager", "SimulatedFailure",
+    "cache_logical_axes", "make_rules", "pspec_for_axes", "shardings_for",
+    "make_batch_specs", "make_serve_fns", "make_train_state_specs",
+    "make_train_step", "param_specs",
+]

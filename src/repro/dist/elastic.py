@@ -1,0 +1,63 @@
+"""Elastic resharding: move a train state onto a different mesh.
+
+Koalja's underlay transparency applied to capacity changes: the state is a
+pytree of arrays plus a logical-axes tree; a new mesh just means new rules
+and a ``device_put`` onto the derived shardings. Works for growing (more
+hosts join), shrinking (hosts lost, after restore), and axis reshape
+(e.g. trading data for model parallelism at a config change).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .sharding import make_rules, shardings_for
+
+
+def _state_shardings(state: dict, axes, rules: dict, mesh) -> dict:
+    """Sharding tree matching a {params, opt, step, ...} train state.
+
+    params / opt.m / opt.v follow the logical param axes; every other leaf
+    (step, opt.count, auxiliary scalars) is replicated."""
+    repl = NamedSharding(mesh, P())
+    out: dict = {}
+    for key, sub in state.items():
+        if key == "params":
+            out[key] = shardings_for(axes, sub, rules, mesh)
+        elif key == "opt":
+            out[key] = {
+                k: (
+                    shardings_for(axes, v, rules, mesh)
+                    if k in ("m", "v")
+                    else jax.tree.map(lambda _: repl, v)
+                )
+                for k, v in sub.items()
+            }
+        else:
+            out[key] = jax.tree.map(lambda _: repl, sub)
+    return out
+
+
+def reshard_state(
+    state: dict,
+    axes,
+    mesh_from,
+    mesh_to,
+    cfg,
+    mode: str,
+    global_batch: Optional[int] = None,
+):
+    """Reshard {params, opt, step} from mesh_from onto mesh_to.
+
+    axes: the logical-axes tree returned by ``model.init`` (params layout).
+    Returns (new_state, shardings). mesh_from is accepted for symmetry /
+    audit logging; the transfer itself is expressed purely as target
+    shardings (XLA emits the minimal resharding collective).
+    """
+    rules = make_rules(cfg, mesh_to, mode, global_batch)
+    shardings = _state_shardings(state, axes, rules, mesh_to)
+    new_state = jax.device_put(state, shardings)
+    return new_state, shardings

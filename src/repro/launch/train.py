@@ -25,11 +25,10 @@ from repro.configs import get_config
 from repro.core import ProvenanceRegistry, software_version_of
 from repro.data.pipeline import build_data_pipeline, next_batch
 from repro.dist.ft import FaultToleranceManager, SimulatedFailure
-from repro.dist.sharding import make_rules
-from repro.dist.step import make_train_step
 from repro.launch.mesh import make_host_mesh
 from repro.models.registry import build_model, train_loss
 from repro.optim import adamw_init, cosine_warmup
+from repro.workspace import MeshExecutor
 
 
 def main(argv=None):
@@ -53,13 +52,15 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)
-    mesh = make_host_mesh()
-    rules = make_rules(cfg, mesh, "train", args.batch)
     schedule = cosine_warmup(args.lr, max(2, args.steps // 10), args.steps)
 
-    jitted, state_shapes, state_shard, batch_shard = make_train_step(
-        model, mesh, schedule, rules=rules,
-        global_batch=args.batch, microbatches=args.microbatches,
+    # the executor backend owns the mesh + sharding rules; the same call
+    # targets a production mesh by swapping the executor, nothing else
+    executor = MeshExecutor(
+        make_host_mesh(), cfg=cfg, mode="train", global_batch=args.batch
+    )
+    jitted, state_shapes, state_shard, batch_shard = executor.train_step(
+        model, schedule, microbatches=args.microbatches
     )
 
     registry = ProvenanceRegistry()

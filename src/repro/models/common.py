@@ -80,6 +80,7 @@ class ArchConfig:
     moe_groups: int = 0  # >0: group-local MoE dispatch (GShard groups = data shards)
     pad_heads: int = 0  # pad attention heads for TP divisibility (zero wo rows)
     moe_block_tokens: int = 0  # 0 = no token chunking in MoE
+    moe_exact_tokens: int = 512  # decode/smoke-scale calls dispatch drop-free
     use_pallas: bool = False  # TPU path; CPU tests use jnp references
 
     # -- derived -----------------------------------------------------------

@@ -37,6 +37,20 @@ def init_moe(pb: ParamBuilder, cfg: ArchConfig) -> dict:
 
 
 def expert_capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    """Per-expert capacity bin size for an n_tokens dispatch call.
+
+    Calls at or below ``cfg.moe_exact_tokens`` (decode steps — one token per
+    sequence — and CPU smoke scale) get capacity = n_tokens: no expert can
+    overflow (each token occupies an expert at most once), so the dispatch
+    is *drop-free* and decode logits match the teacher-forced trunk exactly.
+    Above the threshold — statistical scale, where load balancing holds —
+    capacity is proportional (``capacity_factor``) and overflow tokens are
+    dropped (GShard semantics, a throughput lever). The threshold is kept at
+    decode scale (512) deliberately: raising it would silently change
+    training numerics and grow the (E, C, D) dispatch buffers for mid-size
+    batches."""
+    if n_tokens <= cfg.moe_exact_tokens:
+        return n_tokens
     c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
     return max(8, -(-c // 8) * 8)  # round up to 8 for layout friendliness
 

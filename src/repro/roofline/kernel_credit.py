@@ -101,11 +101,13 @@ def kernel_io_bytes(
     # ---- moe grouped matmul ---------------------------------------------------
     n_moe = sum(1 for s in cfg.layout if s.ffn == "moe") * G
     if n_moe:
+        from repro.models.moe import expert_capacity
+
         E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
         T = B * (L if kind != "decode" else 1)
         Gd = max(1, cfg.moe_groups)  # group-local dispatch groups
         Tg = T // Gd
-        C = max(8, int(Tg * cfg.top_k * cfg.capacity_factor / E))
+        C = expert_capacity(Tg, cfg)  # matches the runtime dispatch bins
         e_sh = _shards(rules, mesh_shape, "experts", E)
         f_sh = _shards(rules, mesh_shape, "mlp", F) if e_sh == 1 else 1
         g_sh = _shards(rules, mesh_shape, "moe_group", Gd)

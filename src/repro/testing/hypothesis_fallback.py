@@ -1,0 +1,174 @@
+"""Minimal drop-in for the ``hypothesis`` API surface this repo uses.
+
+The real hypothesis is preferred (install it and this module is never
+imported); in hermetic containers without it, property tests still run as
+seeded random sampling: ``@given`` draws ``max_examples`` pseudo-random
+examples per strategy from a deterministic per-example seed. No shrinking,
+no database, no edge-case heuristics — strictly weaker than hypothesis, but
+it keeps the invariants exercised and the test module collectable.
+
+Supported: given (positional + keyword strategies), settings(max_examples,
+deadline), strategies.{integers, floats, lists, tuples, text, dictionaries,
+data}.
+"""
+
+from __future__ import annotations
+
+import functools
+import random as _random
+import types
+from typing import Any, Callable, Optional
+
+__all__ = ["given", "settings", "strategies"]
+
+
+class Strategy:
+    def __init__(self, draw: Callable, label: str = "strategy") -> None:
+        self._draw = draw
+        self.label = label
+
+    def example(self, rng: _random.Random) -> Any:
+        return self._draw(rng)
+
+    def __repr__(self) -> str:
+        return f"<fallback {self.label}>"
+
+
+def _integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(
+        lambda rng: rng.randint(min_value, max_value),
+        f"integers({min_value}, {max_value})",
+    )
+
+
+def _floats(
+    min_value: Optional[float] = None,
+    max_value: Optional[float] = None,
+    allow_nan: bool = True,
+    allow_infinity: bool = True,
+    width: int = 64,
+) -> Strategy:
+    lo = -1e9 if min_value is None else float(min_value)
+    hi = 1e9 if max_value is None else float(max_value)
+
+    def draw(rng: _random.Random) -> float:
+        # mix uniform with a few magnitude-spanning draws
+        if rng.random() < 0.2:
+            sign = rng.choice((-1.0, 1.0))
+            x = sign * (10.0 ** rng.uniform(-6, 6))
+            x = min(max(x, lo), hi)
+        else:
+            x = rng.uniform(lo, hi)
+        if width == 32:
+            import numpy as np
+
+            x = float(np.float32(x))
+            x = min(max(x, lo), hi)
+        return x
+
+    return Strategy(draw, f"floats({lo}, {hi})")
+
+
+def _lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    return Strategy(
+        lambda rng: [
+            elements.example(rng) for _ in range(rng.randint(min_size, max_size))
+        ],
+        f"lists({elements.label})",
+    )
+
+
+def _tuples(*elems: Strategy) -> Strategy:
+    return Strategy(
+        lambda rng: tuple(e.example(rng) for e in elems),
+        f"tuples[{len(elems)}]",
+    )
+
+
+def _text(alphabet: str = "abcdefghijklmnopqrstuvwxyz", min_size: int = 0, max_size: int = 10) -> Strategy:
+    chars = list(alphabet)
+    return Strategy(
+        lambda rng: "".join(
+            rng.choice(chars) for _ in range(rng.randint(min_size, max_size))
+        ),
+        "text",
+    )
+
+
+def _dictionaries(
+    keys: Strategy, values: Strategy, min_size: int = 0, max_size: int = 10
+) -> Strategy:
+    def draw(rng: _random.Random) -> dict:
+        n = rng.randint(min_size, max_size)
+        out: dict = {}
+        for _ in range(4 * max(n, 1)):
+            if len(out) >= n:
+                break
+            out[keys.example(rng)] = values.example(rng)
+        return out
+
+    return Strategy(draw, "dictionaries")
+
+
+class _DataObject:
+    """Interactive draw handle (``st.data()``)."""
+
+    def __init__(self, rng: _random.Random) -> None:
+        self._rng = rng
+
+    def draw(self, strategy: Strategy, label: Optional[str] = None) -> Any:
+        return strategy.example(self._rng)
+
+
+def _data() -> Strategy:
+    return Strategy(lambda rng: _DataObject(rng), "data()")
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    lists=_lists,
+    tuples=_tuples,
+    text=_text,
+    dictionaries=_dictionaries,
+    data=_data,
+)
+
+
+def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
+    def deco(fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def wrapper(*args: Any, **kwargs: Any):
+            n = getattr(wrapper, "_fallback_max_examples", 100)
+            for i in range(n):
+                rng = _random.Random(0x5EED + 7919 * i)
+                vals = [s.example(rng) for s in arg_strategies]
+                kvals = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *vals, **kwargs, **kvals)
+                except Exception as e:
+                    head = e.args[0] if e.args else repr(e)
+                    e.args = (
+                        f"{head}\n[hypothesis-fallback example #{i}: "
+                        f"args={vals!r} kwargs={kvals!r}]",
+                    ) + tuple(e.args[1:])
+                    raise
+
+        wrapper.is_hypothesis_test = True
+        # pytest must not mistake strategy-bound params for fixtures: hide
+        # the original signature (hypothesis does the same re-signing)
+        import inspect
+
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature([])
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = 100, deadline: Any = None, **_ignored: Any):
+    def deco(fn: Callable) -> Callable:
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco

@@ -1,0 +1,33 @@
+"""repro.workspace — the typed public API over the Koalja circuit layer.
+
+    from repro.workspace import Workspace
+
+    ws = Workspace("demo")
+    cam = ws.source(read_fn, name="camera", outputs=["image"])
+    det = ws.task(detect_fn, name="detect", inputs=["frame"], outputs=["boxes"])
+    cam["image"] >> det["frame"]
+    ws.push(cam, image=img)
+    boxes = ws.pull(det)["boxes"]
+
+See :class:`Workspace` for the full surface (push / pull / sample / watch /
+ghost / provenance queries) and :mod:`repro.workspace.executors` for the
+backend protocol (InlineExecutor, MeshExecutor).
+"""
+
+from .executors import Executor, InlineExecutor, MeshExecutor
+from .handles import Port, TaskHandle, Wire, WiringError
+from .workspace import (
+    RunResult,
+    TaskResult,
+    Watcher,
+    Workspace,
+    WorkspaceFrozenError,
+    service,
+)
+
+__all__ = [
+    "Executor", "InlineExecutor", "MeshExecutor",
+    "Port", "TaskHandle", "Wire", "WiringError",
+    "RunResult", "TaskResult", "Watcher", "Workspace",
+    "WorkspaceFrozenError", "service",
+]

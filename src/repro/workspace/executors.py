@@ -1,0 +1,122 @@
+"""Executor backends: where a Workspace's circuit actually runs.
+
+The executor protocol is the underlay-transparency seam from the paper: the
+breadboard (Workspace) and the trigger semantics (push/pull/sample) are
+fixed; *where* task code executes is a backend choice. ``InlineExecutor``
+runs everything in-process (the paper's single-node breadboard).
+``MeshExecutor`` binds the same circuit to a JAX device mesh: logical-axis
+sharding rules are installed around every task execution, and model-step
+tasks can be compiled through :mod:`repro.dist` (the Kubernetes-underlay
+story mapped onto meshes).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Protocol, runtime_checkable
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """Minimal backend contract: drive one PipelineManager engine call."""
+
+    def push(self, manager, task: str, payloads: dict, region: str) -> dict: ...
+
+    def pull(self, manager, target: str) -> dict: ...
+
+    def sample(self, manager, source: str) -> dict: ...
+
+    def inject(self, manager, task: str, input_name: str, payload: Any, region: str): ...
+
+
+class InlineExecutor:
+    """Run tasks in-process on the shared trigger engine."""
+
+    def push(self, manager, task: str, payloads: dict, region: str) -> dict:
+        return manager._push(task, region=region, **payloads)
+
+    def pull(self, manager, target: str) -> dict:
+        return manager._pull(target)
+
+    def sample(self, manager, source: str) -> dict:
+        return manager._sample(source)
+
+    def inject(self, manager, task: str, input_name: str, payload: Any, region: str):
+        return manager._inject(task, input_name, payload, region=region)
+
+    def __repr__(self) -> str:
+        return "InlineExecutor()"
+
+
+class MeshExecutor(InlineExecutor):
+    """Execute the circuit against a JAX mesh via :mod:`repro.dist`.
+
+    Every engine call runs under ``axis_rules(rules, mesh)``, so any
+    ``shard()`` hints inside plugin task code bind to this mesh; model-step
+    tasks get their jitted sharded implementations from the dist layer
+    (``train_step`` / ``serve_fns``). The circuit, its provenance, and the
+    trigger modes are untouched — only the substrate changes.
+    """
+
+    def __init__(
+        self,
+        mesh=None,
+        *,
+        rules: Optional[dict] = None,
+        cfg=None,
+        mode: str = "train",
+        global_batch: Optional[int] = None,
+    ) -> None:
+        if mesh is None:
+            from repro.launch.mesh import make_host_mesh
+
+            mesh = make_host_mesh()
+        self.mesh = mesh
+        if rules is None and cfg is not None:
+            from repro.dist.sharding import make_rules
+
+            rules = make_rules(cfg, mesh, mode, global_batch)
+        self.rules = rules
+        self.mode = mode
+        self.global_batch = global_batch
+
+    def _ctx(self):
+        from contextlib import nullcontext
+
+        from repro.models.common import axis_rules
+
+        return axis_rules(self.rules, self.mesh) if self.rules else nullcontext()
+
+    def push(self, manager, task: str, payloads: dict, region: str) -> dict:
+        with self._ctx():
+            return super().push(manager, task, payloads, region)
+
+    def pull(self, manager, target: str) -> dict:
+        with self._ctx():
+            return super().pull(manager, target)
+
+    def sample(self, manager, source: str) -> dict:
+        with self._ctx():
+            return super().sample(manager, source)
+
+    # -- dist-layer step builders (model tasks) -----------------------------
+    def train_step(self, model, schedule, **kwargs):
+        """Jitted sharded train step on this executor's mesh (repro.dist)."""
+        from repro.dist.step import make_train_step
+
+        kwargs.setdefault("global_batch", self.global_batch)
+        if self.rules is not None:
+            kwargs.setdefault("rules", self.rules)
+        return make_train_step(model, self.mesh, schedule, **kwargs)
+
+    def serve_fns(self, model, **kwargs):
+        """Jitted sharded (prefill, decode) on this executor's mesh."""
+        from repro.dist.step import make_serve_fns
+
+        kwargs.setdefault("global_batch", self.global_batch)
+        if self.rules is not None:
+            kwargs.setdefault("rules", self.rules)
+        return make_serve_fns(model, self.mesh, **kwargs)
+
+    def __repr__(self) -> str:
+        shape = dict(self.mesh.shape)
+        return f"MeshExecutor(mesh={shape}, mode={self.mode!r})"

@@ -16,6 +16,11 @@ from repro.models.registry import (
 from repro.optim import adamw_init, adamw_update, constant_lr
 
 
+# multi-minute model/kernel path: runs in the full CI job only
+pytestmark = pytest.mark.slow
+
+
+
 def _batch(cfg, B=2, L=32, key=0):
     k = jax.random.key(key)
     batch = {

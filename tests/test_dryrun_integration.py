@@ -9,6 +9,11 @@ import sys
 
 import pytest
 
+
+# multi-minute model/kernel path: runs in the full CI job only
+pytestmark = pytest.mark.slow
+
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

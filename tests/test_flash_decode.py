@@ -8,6 +8,11 @@ import pytest
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.ref import reference_decode
 
+
+# multi-minute model/kernel path: runs in the full CI job only
+pytestmark = pytest.mark.slow
+
+
 RNG = np.random.RandomState(0)
 
 

@@ -11,6 +11,11 @@ from repro.kernels.ops import kernel_set
 from repro.models.registry import build_model, train_loss
 
 
+# multi-minute model/kernel path: runs in the full CI job only
+pytestmark = pytest.mark.slow
+
+
+
 @pytest.mark.parametrize("arch", ["mixtral-8x7b", "falcon-mamba-7b", "jamba-v0.1-52b"])
 def test_trunk_with_pallas_kernels_matches_reference(arch):
     cfg = get_config(arch).reduced()

@@ -14,6 +14,11 @@ from repro.kernels.ref import (
     reference_selective_scan,
 )
 
+
+# multi-minute model/kernel path: runs in the full CI job only
+pytestmark = pytest.mark.slow
+
+
 RNG = np.random.RandomState(0)
 
 

@@ -15,6 +15,11 @@ from repro.models.moe import expert_capacity, init_moe, moe_ffn
 from repro.models.registry import build_model, train_loss
 
 
+# multi-minute model/kernel path: runs in the full CI job only
+pytestmark = pytest.mark.slow
+
+
+
 def _moe_params(cfg, dtype=jnp.float32):
     pb = ParamBuilder(jax.random.key(0), dtype)
     return jax.tree.map(

@@ -18,6 +18,11 @@ from repro.models.registry import (
     prefill,
 )
 
+
+# multi-minute model/kernel path: runs in the full CI job only
+pytestmark = pytest.mark.slow
+
+
 DECODE_ARCHS = [
     "internlm2-20b",
     "qwen2.5-32b",

@@ -1,7 +1,11 @@
 """Hypothesis property tests for system invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic containers: seeded-random fallback
+    from repro.testing.hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import ContentCache, InputSpec, SnapshotPolicy, snapshot_key
 from repro.optim import dequantize_int8, quantize_int8

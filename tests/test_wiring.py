@@ -1,0 +1,95 @@
+"""Wiring-language error paths + annotation parsing (core/wiring.py).
+
+The breadboard DSL must fail loudly at parse time — a typo'd line or a
+missing implementation is a design error, not a runtime surprise."""
+
+import pytest
+
+from repro.core import build_wiring
+from repro.core.policy import InputSpec
+from repro.workspace import Workspace
+
+IMPLS = {
+    "a": lambda **kw: {"x": 1},
+    "b": lambda **kw: {"y": 2},
+}
+
+
+def test_unparseable_line_raises_with_content():
+    text = """
+    (in) a (x)
+    this is not a wiring line
+    """
+    with pytest.raises(ValueError, match="unparseable wiring line.*not a wiring line"):
+        build_wiring(text, IMPLS)
+
+
+def test_missing_impl_raises_keyerror_naming_task():
+    with pytest.raises(KeyError, match="no implementation supplied for task 'ghost'"):
+        build_wiring("(in) ghost (out)", {})
+
+
+def test_duplicate_task_rejected():
+    text = """
+    (in) a (x)
+    (x) a (y)
+    """
+    with pytest.raises(ValueError, match="duplicate task a"):
+        build_wiring(text, IMPLS)
+
+
+def test_implicit_edges_recorded_not_wired():
+    text = """
+    (in) a (x)
+    (x implicit) b (y)
+    """
+    pipe = build_wiring(text, IMPLS)
+    # implicit input is a client-server side channel: no SmartLink, but the
+    # edge lands in the design record
+    assert ("x", "b") in pipe.implicit_edges
+    assert not any(l.dst_task == "b" for l in pipe.links)
+    # and 'b' has no wired inputs -> it parses as a source
+    assert pipe.tasks["b"].source
+
+
+def test_buffer_annotations_parse_into_specs():
+    text = """
+    (in[8]) a (x)
+    (x[10/2]) b (y)
+    """
+    pipe = build_wiring(text, IMPLS)
+    spec_a = pipe.tasks["a"].input_specs[0]
+    assert (spec_a.name, spec_a.buffer, spec_a.slide) == ("in", 8, None)
+    spec_b = pipe.tasks["b"].input_specs[0]
+    assert (spec_b.name, spec_b.buffer, spec_b.slide) == ("x", 10, 2)
+    assert str(spec_b) == "x[10/2]"
+
+
+@pytest.mark.parametrize("bad", ["x[2/5]", "x[0/0]", "x[3/0]"])
+def test_invalid_window_annotation_rejected(bad):
+    with pytest.raises(ValueError, match="window slide must satisfy"):
+        InputSpec.parse(bad)
+
+
+def test_from_wiring_matches_parse_and_adds_typed_handles():
+    text = """
+    [named]
+    (in) a (x)
+    (x) b (y)
+    """
+    ws = Workspace.from_wiring(text, IMPLS)
+    assert ws.name == "named"
+    assert ws.tasks() == ["a", "b"]
+    # typed ports resolve; unknown ports fail at access time
+    assert ws["b"]["x"].direction == "in"
+    assert ws["b"]["y"].direction == "out"
+    with pytest.raises(KeyError, match="no port 'zz'"):
+        ws["b"]["zz"]
+
+
+def test_parse_wiring_shim_warns_deprecation():
+    from repro.core import parse_wiring
+
+    with pytest.warns(DeprecationWarning, match="Workspace.from_wiring"):
+        pipe = parse_wiring("(in) a (x)", IMPLS)
+    assert "a" in pipe.tasks

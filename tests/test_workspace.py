@@ -1,0 +1,274 @@
+"""Workspace facade: typed ports, operator wiring, buffers, trigger modes,
+watchers, ghost runs, executor backends, and the core deprecation shims."""
+
+import numpy as np
+import pytest
+
+from repro.workspace import (
+    InlineExecutor,
+    MeshExecutor,
+    Workspace,
+    WorkspaceFrozenError,
+    WiringError,
+)
+
+
+def _simple_ws():
+    ws = Workspace("t")
+    double = ws.task(lambda x: {"y": x * 2}, name="double", inputs=["x"], outputs=["y"])
+    double2 = ws.task(lambda y: {"z": y + 1}, name="double2", inputs=["y"], outputs=["z"])
+    add = ws.task(
+        lambda y, z: {"w": y + z}, name="add", inputs=["y", "z"], outputs=["w"],
+        mode="swap_new_for_old",
+    )
+    double["y"] >> double2["y"]
+    double["y"] >> add["y"]
+    double2["z"] >> add["z"]
+    return ws, double, double2, add
+
+
+# ---------------------------------------------------------------------------
+# typed handles
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_port_fails_at_access_time():
+    ws, double, *_ = _simple_ws()
+    with pytest.raises(KeyError, match="no port 'nope'"):
+        double["nope"]
+
+
+def test_wire_direction_enforced():
+    ws, double, double2, _ = _simple_ws()
+    with pytest.raises(WiringError, match="must start at an output"):
+        double["x"] >> double2["y"]
+    with pytest.raises(WiringError, match="no input 'z'"):
+        double2["z"] >> double  # name-matched wiring: double has no input 'z'
+
+
+def test_duplicate_task_rejected():
+    ws = Workspace()
+    ws.task(lambda: {"out": 1}, name="a")
+    with pytest.raises(WiringError, match="duplicate task 'a'"):
+        ws.task(lambda: {"out": 2}, name="a")
+
+
+def test_name_matched_task_wiring():
+    ws = Workspace()
+    a = ws.source(lambda: {"doc": 1}, name="a", outputs=["doc"])
+    b = ws.task(lambda doc: {"out": doc}, name="b", inputs=["doc"], outputs=["out"])
+    a >> b  # single output matches same-named input
+    ws.sample(a)
+    assert ws.pull(b)["out"] == 1
+
+
+# ---------------------------------------------------------------------------
+# trigger modes on one engine
+# ---------------------------------------------------------------------------
+
+
+def test_push_and_pull_share_engine():
+    ws, double, double2, add = _simple_ws()
+    run = ws.push(double, x=21)
+    assert "add" in run
+    assert run["add"]["w"] == 42 + 43
+    # pulling again with no new input resolves without re-execution
+    execs = ws.pipeline.tasks["double2"].executions
+    out = ws.pull(add)
+    assert ws.pipeline.tasks["double2"].executions == execs
+    assert out["w"] == 42 + 43
+
+
+def test_push_output_name_emits_as_sensor():
+    ws = Workspace()
+    cam = ws.source(lambda: {"image": np.zeros(2)}, name="camera", outputs=["image"])
+    det = ws.task(
+        lambda frame: {"s": float(np.sum(frame))}, name="det", inputs=["frame"],
+        outputs=["s"],
+    )
+    cam["image"] >> det["frame"]
+    run = ws.push(cam, image=np.arange(4.0))
+    assert run["det"]["s"] == 6.0
+    # the emitted AV is attributed to the camera in the provenance story
+    lin = ws.lineage(run["det"].av("s"))
+    assert lin["parents"][0]["source_task"] == "camera"
+
+
+def test_push_unknown_payload_name_raises():
+    ws, double, *_ = _simple_ws()
+    with pytest.raises(KeyError, match="no input or output named 'bogus'"):
+        ws.push(double, bogus=1)
+
+
+def test_push_output_name_on_non_source_rejected():
+    """Provenance integrity: only sensors may emit external payloads as
+    their own outputs — otherwise forged artifacts would carry
+    authentic-looking travel documents."""
+    ws, double, *_ = _simple_ws()
+    with pytest.raises(ValueError, match="non-source task 'double'"):
+        ws.push(double, y=123)
+
+
+def test_buffer_window_snapshots():
+    ws = Workspace()
+    s = ws.source(lambda: {"x": 0}, name="s", outputs=["x"])
+    agg = ws.task(
+        lambda x: {"n": len(x), "vals": list(x)}, name="agg", inputs=["x"],
+        outputs=["n", "vals"],
+    )
+    agg["x"].buffer(4, slide=2)
+    s["x"] >> agg["x"]
+    seen = []
+    ws.watch(agg, lambda r: seen.append(r["vals"]))
+    for i in range(8):
+        ws.push(s, x=i)
+    # windows: [0..3], [2..5], [4..7]
+    assert seen == [[0, 1, 2, 3], [2, 3, 4, 5], [4, 5, 6, 7]]
+
+
+def test_task_buffer_requires_single_input():
+    ws, *_ , add = _simple_ws()
+    with pytest.raises(WiringError, match="2 inputs"):
+        add.buffer(3)
+
+
+def test_frozen_after_first_run():
+    ws, double, *_ = _simple_ws()
+    ws.push(double, x=1)
+    with pytest.raises(WorkspaceFrozenError):
+        ws.task(lambda: {"out": 1}, name="late")
+    with pytest.raises(WorkspaceFrozenError):
+        double["x"].buffer(3)
+
+
+def test_watch_callback_and_events():
+    ws, double, *_ = _simple_ws()
+    w = ws.watch("add")
+    ws.push(double, x=1)
+    ws.push(double, x=2)
+    assert len(w.events) == 2
+    assert w.latest()["w"] == (2 * 2) + (2 * 2 + 1)
+    w.cancel()
+    ws.push(double, x=3)
+    assert len(w.events) == 2
+
+
+def test_ghost_run_routes_without_data():
+    import jax
+    import jax.numpy as jnp
+
+    ws = Workspace("g")
+    f = ws.task(lambda x: {"y": jnp.asarray(x) * 2.0}, name="f", inputs=["x"], outputs=["y"])
+    g = ws.task(lambda y: {"z": y + 1}, name="g", inputs=["y"], outputs=["z"])
+    f["y"] >> g["y"]
+    report = ws.ghost({f["x"]: jax.ShapeDtypeStruct((4, 4), jnp.float32)})
+    assert report["tasks"]["f"]["executions"] == 1
+    assert report["routes"]["f.y->g.y"]["carried"] == 1
+
+
+def test_validate_reports_unwired_inputs():
+    ws = Workspace()
+    ws.task(lambda a, b: {"out": a + b}, name="t", inputs=["a", "b"], outputs=["out"])
+    problems = ws.validate()
+    assert sorted(problems) == ["t.a unwired", "t.b unwired"]
+
+
+def test_validate_does_not_freeze_breadboard():
+    ws = Workspace()
+    t = ws.task(lambda a: {"out": a}, name="t", inputs=["a"], outputs=["out"])
+    assert ws.validate() == ["t.a unwired"]
+    # the reported problem can still be fixed after validating
+    s = ws.source(lambda: {"a": 1}, name="s", outputs=["a"])
+    s["a"] >> t["a"]
+    assert ws.validate() == []
+    ws.sample(s)
+    assert ws.pull(t)["out"] == 1
+
+
+def test_from_wiring_buffer_edit_reaches_engine():
+    impls = {"a": lambda **kw: {"x": kw["in"]}, "b": lambda x: {"y": sum(x)}}
+    ws = Workspace.from_wiring("(in) a (x)\n(x) b (y)", impls)
+    ws["b"]["x"].buffer(3)
+    for i in range(6):
+        ws.push("a", **{"in": i})
+    b = ws.pipeline.tasks["b"]
+    assert b.executions == 2  # fires per 3 fresh values, not per value
+    assert str(b.input_specs[0]) == "x[3]"
+    assert ws.pull("b")["y"] == 3 + 4 + 5
+
+
+def test_pull_notifies_watchers():
+    ws = Workspace()
+    src = ws.source(lambda: {"x": 7}, name="src", outputs=["x"])
+    f = ws.task(lambda x: {"y": x * 2}, name="f", inputs=["x"], outputs=["y"])
+    src["x"] >> f["x"]
+    w = ws.watch(f)
+    ws.pull(f)  # make-mode firing is an event too
+    assert len(w.events) == 1
+    assert w.latest()["y"] == 14
+
+
+# ---------------------------------------------------------------------------
+# executor backends
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_executor_runs_circuit_and_builds_steps():
+    import jax
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.registry import build_model
+    from repro.optim import adamw_init, constant_lr
+
+    cfg = get_config("stablelm-1.6b").reduced()
+    ex = MeshExecutor(make_host_mesh(), cfg=cfg, mode="train", global_batch=2)
+    assert ex.rules["embed"] == "data" or ex.rules["embed"] is None
+
+    # circuit runs under the mesh context
+    ws = Workspace("m", executor=ex)
+    t = ws.task(lambda x: {"y": x + 1}, name="t", inputs=["x"], outputs=["y"])
+    assert ws.push(t, x=1)["t"]["y"] == 2
+
+    # dist-layer step builder is routed through the executor
+    model = build_model(cfg)
+    jitted, state_shapes, state_shard, _ = ex.train_step(model, constant_lr(1e-3))
+    params, _ = model.init(jax.random.key(0))
+    state = {
+        "params": params,
+        "opt": adamw_init(params),
+        "step": jax.numpy.zeros((), jax.numpy.int32),
+    }
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab)
+    state, metrics = jitted(state, {"tokens": toks, "labels": toks})
+    assert int(state["step"]) == 1
+    assert float(metrics["loss"]) > 0
+
+
+def test_executor_protocol_shape():
+    from repro.workspace import Executor
+
+    assert isinstance(InlineExecutor(), Executor)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: old call forms warn, engine still works
+# ---------------------------------------------------------------------------
+
+
+def test_old_pipeline_surface_warns():
+    from repro.core import Pipeline, PipelineManager, SmartTask
+
+    pipe = Pipeline("old")
+    with pytest.warns(DeprecationWarning, match="Workspace.task"):
+        pipe.add_task(SmartTask("f", lambda x: {"y": x}, ["x"], ["y"]))
+    with pytest.warns(DeprecationWarning, match="Workspace"):
+        pipe.add_task(SmartTask("g", lambda y: {"z": y}, ["y"], ["z"]))
+        pipe.connect("f", "y", "g", "y")
+    mgr = PipelineManager(pipe)
+    with pytest.warns(DeprecationWarning, match="Workspace.push"):
+        fired = mgr.push("f", x=5)
+    assert "g" in fired
+    with pytest.warns(DeprecationWarning, match="Workspace.pull"):
+        out = mgr.pull("g")
+    assert mgr.value_of(out["z"]) == 5
