@@ -7,6 +7,9 @@ each bench pins one qualitative claim to a number).
   B4  notification vs polling  §III.F  Principle 1 (timescale separation)
   B5  snapshot policy cost     §III.I  all_new / swap / merge / window
   B6  wireframing              §III.K  ghost batches expose routing at ~zero cost
+  B8  repeated push            §III.F  semantic memoization short-circuits the
+                                       hot path: unchanged inputs re-pushed N
+                                       times execute ~once and move ~no bytes
 """
 
 from __future__ import annotations
@@ -58,24 +61,27 @@ def bench_metadata_overhead():
     return out
 
 
+def _push_identical(ws: Workspace, pushes: int, n: int = 64) -> float:
+    """Shared repeated-push workload (B2/B8): push one seeded array
+    ``pushes`` times — identical content every time — and return the wall."""
+    x = np.random.RandomState(0).randn(n, n)
+    t0 = time.perf_counter()
+    for _ in range(pushes):
+        ws.push("a", x=x)
+    return time.perf_counter() - t0
+
+
 def bench_cache_reuse():
     """Re-pushing unchanged inputs: executions avoided via content cache."""
     results = {}
     for pushes in (10,):
         mgr = _mlp_workspace(heavy_ms=5.0)
-        x = np.random.RandomState(0).randn(64, 64)
-        t0 = time.perf_counter()
-        for _ in range(pushes):
-            mgr.push("a", x=x)  # identical content
-        cold_and_hits = time.perf_counter() - t0
+        cold_and_hits = _push_identical(mgr, pushes)
         stats = mgr.stats()
         execs = sum(t["executions"] for t in stats["tasks"].values())
         hits = sum(t["cache_hits"] for t in stats["tasks"].values())
         mgr2 = _mlp_workspace(heavy_ms=5.0, cache=False)
-        t0 = time.perf_counter()
-        for _ in range(pushes):
-            mgr2.push("a", x=x)
-        no_cache = time.perf_counter() - t0
+        no_cache = _push_identical(mgr2, pushes)
         results[f"{pushes}_pushes"] = {
             "executions_with_cache": execs,
             "cache_hits": hits,
@@ -206,6 +212,38 @@ def _rebuild_wf(heavy) -> Workspace:
     return ws
 
 
+def bench_repeated_push(pushes: int = 10):
+    """The sustainability workload (§III.F): re-push byte-identical inputs.
+
+    Only the first push executes user code; every later push short-circuits
+    on the memo key (software version, input hashes, policy mode), emits
+    ``cache_hit`` visitor events, and moves no payload bytes. Reports the
+    execution reduction vs a cache-disabled circuit and the bytes the
+    circuit never moved.
+    """
+    ws = _mlp_workspace(heavy_ms=2.0)
+    wall = _push_identical(ws, pushes, n=128)
+    stats = ws.stats()
+    execs = sum(t["executions"] for t in stats["tasks"].values())
+    n_tasks = len(stats["tasks"])
+    cache_hit_events = sum(
+        1
+        for task in stats["tasks"]
+        for e in ws.visitor_log(task)
+        if e["event"] == "cache_hit"
+    )
+    return {
+        "pushes": pushes,
+        "executions": execs,
+        "executions_without_cache": pushes * n_tasks,
+        "execution_reduction_x": (pushes * n_tasks) / max(execs, 1),
+        "executions_avoided": stats["sustainability"]["executions_avoided"],
+        "cache_hit_events": cache_hit_events,
+        "bytes_not_moved": stats["sustainability"]["bytes_not_moved"],
+        "wall_s": wall,
+    }
+
+
 ALL = {
     "B1_metadata_overhead": bench_metadata_overhead,
     "B2_cache_reuse": bench_cache_reuse,
@@ -213,4 +251,5 @@ ALL = {
     "B4_notification_vs_polling": bench_notification_vs_polling,
     "B5_policy_throughput": bench_policy_throughput,
     "B6_wireframe": bench_wireframe,
+    "B8_repeated_push": bench_repeated_push,
 }

@@ -1,0 +1,155 @@
+"""Semantic memoization — the sustainability pillar (paper §III.F / §III.J).
+
+A memo entry keys one task execution on *content identity*:
+
+    key = (task software version, ordered input content hashes,
+           snapshot-policy mode)
+
+Unchanged inputs + unchanged code + unchanged aggregation semantics ⇒ hit ⇒
+no recompute ("it's unnecessary to recompile binaries that are unchanged").
+The policy mode is part of the key because the same input hashes mean
+different things under ``all_new`` vs ``merge`` aggregation. A
+software-version change invalidates downstream results exactly as the paper
+prescribes for "software updates trigger recomputation".
+
+A hit is *not* lossy for forensics: each record remembers the uids of the
+AVs the original run produced (``out_uids``), so the short-circuited AV can
+carry a ``memo_of`` pointer and :meth:`ProvenanceRegistry.lineage` still
+reconstructs the producing run, software version and all.
+
+Sustainability accounting: ``executions_avoided`` counts short-circuited
+firings and ``bytes_saved`` the output payload bytes that never had to be
+recomputed or re-transported (the "bytes not moved" half that belongs to the
+memo layer; the :class:`~repro.core.store.ArtifactStore` counts the
+reference-dedup half).
+
+Purge policy: per-entry TTL classes so caches can "purge at different rates
+depending on the risk of recomputation" (§III.F Principle 2 discussion).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import time
+from typing import Any, Optional
+
+
+def snapshot_key(
+    software_version: str,
+    input_hashes: dict,
+    extra: str = "",
+    policy_mode: str = "",
+) -> str:
+    """Content key for one snapshot execution.
+
+    ``input_hashes`` maps input name -> content hash (or ordered list of
+    hashes for buffered/window inputs); ordering inside a buffer is
+    significant, ordering of input names is not (they are sorted).
+    """
+    parts = [software_version, extra]
+    if policy_mode:
+        parts.append(f"mode={policy_mode}")
+    for name in sorted(input_hashes):
+        v = input_hashes[name]
+        if isinstance(v, (list, tuple)):
+            parts.append(f"{name}=[{','.join(v)}]")
+        else:
+            parts.append(f"{name}={v}")
+    return hashlib.sha256("|".join(parts).encode()).hexdigest()[:24]
+
+
+def make_record(
+    software_version: str,
+    outputs: dict,
+    out_uids: Optional[dict] = None,
+    out_nbytes: Optional[dict] = None,
+) -> dict:
+    """Build a memo record: {output_name: (uri, chash)} plus the forensic
+    back-pointers (original AV uids) and size accounting."""
+    return {
+        "software_version": software_version,
+        "outputs": dict(outputs),
+        "out_uids": dict(out_uids or {}),
+        "out_nbytes": dict(out_nbytes or {}),
+        "produced_at": time.time(),
+    }
+
+
+class MemoCache:
+    """Content-addressed memo table with TTL purge classes and
+    sustainability counters. (Exported as ``ContentCache`` for the original
+    seed name; the two are the same class.)"""
+
+    def __init__(self, default_ttl_s: Optional[float] = None) -> None:
+        self._entries: dict = {}  # key -> (record, expiry)
+        self.default_ttl_s = default_ttl_s
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.executions_avoided = 0
+        self.bytes_saved = 0
+
+    def lookup(self, key: str) -> Optional[Any]:
+        rec = self._entries.get(key)
+        if rec is None:
+            self.misses += 1
+            return None
+        value, expiry = rec
+        if expiry is not None and time.time() > expiry:
+            del self._entries[key]
+            self.evictions += 1
+            self.misses += 1
+            return None
+        self.hits += 1
+        return value
+
+    def insert(self, key: str, value: Any, ttl_s: Optional[float] = None) -> None:
+        ttl = ttl_s if ttl_s is not None else self.default_ttl_s
+        expiry = (time.time() + ttl) if ttl is not None else None
+        self._entries[key] = (value, expiry)
+
+    def credit_hit(self, record: Any) -> int:
+        """Account one short-circuited execution; returns bytes saved."""
+        self.executions_avoided += 1
+        saved = 0
+        if isinstance(record, dict):
+            saved = sum(int(n) for n in record.get("out_nbytes", {}).values())
+        self.bytes_saved += saved
+        return saved
+
+    def invalidate_version(self, software_version_prefix: str) -> int:
+        """Purge entries produced by a given software version (forensic
+        recall: 'a change may be due to software errors, indicating that
+        recomputation is needed')."""
+        doomed = [
+            k
+            for k, (v, _) in self._entries.items()
+            if isinstance(v, dict)
+            and v.get("software_version", "").startswith(software_version_prefix)
+        ]
+        for k in doomed:
+            del self._entries[k]
+            self.evictions += 1
+        return len(doomed)
+
+    def purge_expired(self) -> int:
+        now = time.time()
+        doomed = [k for k, (_, e) in self._entries.items() if e is not None and now > e]
+        for k in doomed:
+            del self._entries[k]
+            self.evictions += 1
+        return len(doomed)
+
+    def stats(self) -> dict:
+        return {
+            "entries": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "executions_avoided": self.executions_avoided,
+            "bytes_saved": self.bytes_saved,
+        }
+
+
+# Seed-era name; kept so `from repro.core import ContentCache` stays valid.
+ContentCache = MemoCache

@@ -6,8 +6,9 @@ Values) flow on links, every artifact carries its travel document, and both
 'make' (pull) and 'reactive' (push) trigger modes share one engine.
 """
 
-from .av import AnnotatedValue, Stamp, content_hash
-from .cache import ContentCache, snapshot_key
+from repro.cache import ContentCache, MemoCache, snapshot_key
+
+from .av import AnnotatedValue, Stamp, content_hash, is_ghost
 from .evalloop import EvalLoop, build_eval_circuit
 from .link import RegionFenceError, SmartLink
 from .pipeline import Pipeline, PipelineManager
@@ -19,8 +20,8 @@ from .wireframe import GhostValue, ghost_run
 from .wiring import build_wiring, parse_wiring
 
 __all__ = [
-    "AnnotatedValue", "Stamp", "content_hash",
-    "ContentCache", "snapshot_key",
+    "AnnotatedValue", "Stamp", "content_hash", "is_ghost",
+    "ContentCache", "MemoCache", "snapshot_key",
     "EvalLoop", "build_eval_circuit",
     "RegionFenceError", "SmartLink",
     "Pipeline", "PipelineManager",

@@ -30,6 +30,26 @@ def _stable_hash_bytes(data: bytes) -> str:
     return hashlib.sha256(data).hexdigest()[:16]
 
 
+def is_ghost(payload: Any) -> bool:
+    """True for abstract payloads (shape+dtype but no materialized bytes):
+    ``jax.ShapeDtypeStruct``, :class:`~repro.core.wireframe.GhostValue`, and
+    anything else that *declares* ``nbytes = None``. Ghosts are pure
+    metadata — the circuit routes them without ever touching the store.
+
+    The check is deliberately narrow: a payload must opt in, either by being
+    a ShapeDtypeStruct or by carrying an explicit ``nbytes`` of None. Real
+    array-likes that merely lack an ``nbytes`` attribute (e.g. sparse
+    matrices) are data, not ghosts, and go through the store."""
+    if type(payload).__name__ == "ShapeDtypeStruct":
+        return True
+    return (
+        hasattr(payload, "shape")
+        and hasattr(payload, "dtype")
+        and hasattr(payload, "nbytes")
+        and payload.nbytes is None
+    )
+
+
 def content_hash(payload: Any) -> str:
     """Content hash of a payload for cache keys and travel documents.
 

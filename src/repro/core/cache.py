@@ -1,86 +1,16 @@
-"""Make-style content-addressed memoization (paper §III.F / §III.J).
+"""Compatibility shim — the memoization subsystem lives in :mod:`repro.cache`.
 
-Cache key = (task software version, snapshot content hashes, policy config).
-Unchanged inputs + unchanged code ⇒ cache hit ⇒ no recompute ("it's
-unnecessary to recompile binaries that are unchanged"). A software-version
-change invalidates downstream results exactly as the paper prescribes for
-"software updates trigger recomputation".
-
-Purge policy: per-entry TTL classes so caches can "purge at different rates
-depending on the risk of recomputation" (§III.F Principle 2 discussion).
+The seed grew this file into a full subsystem (memo records with forensic
+back-pointers, sustainability counters, TTL purge classes); it moved out of
+``repro.core`` so the engine and the policy layer can evolve separately.
+All seed-era imports keep working.
 """
 
-from __future__ import annotations
+from repro.cache.memo import (  # noqa: F401
+    ContentCache,
+    MemoCache,
+    make_record,
+    snapshot_key,
+)
 
-import hashlib
-import time
-from typing import Any, Optional
-
-
-def snapshot_key(software_version: str, input_hashes: dict, extra: str = "") -> str:
-    parts = [software_version, extra]
-    for name in sorted(input_hashes):
-        v = input_hashes[name]
-        if isinstance(v, (list, tuple)):
-            parts.append(f"{name}=[{','.join(v)}]")
-        else:
-            parts.append(f"{name}={v}")
-    return hashlib.sha256("|".join(parts).encode()).hexdigest()[:24]
-
-
-class ContentCache:
-    def __init__(self, default_ttl_s: Optional[float] = None) -> None:
-        self._entries: dict = {}  # key -> (uris/hashes record, expiry)
-        self.default_ttl_s = default_ttl_s
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-
-    def lookup(self, key: str) -> Optional[Any]:
-        rec = self._entries.get(key)
-        if rec is None:
-            self.misses += 1
-            return None
-        value, expiry = rec
-        if expiry is not None and time.time() > expiry:
-            del self._entries[key]
-            self.evictions += 1
-            self.misses += 1
-            return None
-        self.hits += 1
-        return value
-
-    def insert(self, key: str, value: Any, ttl_s: Optional[float] = None) -> None:
-        ttl = ttl_s if ttl_s is not None else self.default_ttl_s
-        expiry = (time.time() + ttl) if ttl is not None else None
-        self._entries[key] = (value, expiry)
-
-    def invalidate_version(self, software_version_prefix: str) -> int:
-        """Purge entries produced by a given software version (forensic
-        recall: 'a change may be due to software errors, indicating that
-        recomputation is needed')."""
-        doomed = [
-            k
-            for k, (v, _) in self._entries.items()
-            if isinstance(v, dict) and v.get("software_version", "").startswith(software_version_prefix)
-        ]
-        for k in doomed:
-            del self._entries[k]
-            self.evictions += 1
-        return len(doomed)
-
-    def purge_expired(self) -> int:
-        now = time.time()
-        doomed = [k for k, (_, e) in self._entries.items() if e is not None and now > e]
-        for k in doomed:
-            del self._entries[k]
-            self.evictions += 1
-        return len(doomed)
-
-    def stats(self) -> dict:
-        return {
-            "entries": len(self._entries),
-            "hits": self.hits,
-            "misses": self.misses,
-            "evictions": self.evictions,
-        }
+__all__ = ["ContentCache", "MemoCache", "make_record", "snapshot_key"]

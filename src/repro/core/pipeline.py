@@ -19,8 +19,9 @@ from __future__ import annotations
 import warnings
 from typing import Any, Optional
 
-from .av import AnnotatedValue, content_hash
-from .cache import ContentCache
+from repro.cache import MemoCache
+
+from .av import AnnotatedValue, content_hash, is_ghost
 from .link import SmartLink
 from .provenance import ProvenanceRegistry
 from .store import ArtifactStore
@@ -114,14 +115,14 @@ class PipelineManager:
         pipeline: Pipeline,
         store: Optional[ArtifactStore] = None,
         registry: Optional[ProvenanceRegistry] = None,
-        cache: Optional[ContentCache] = None,
+        cache: Optional[MemoCache] = None,
         max_rounds: int = 100,
     ) -> None:
         self.pipeline = pipeline
         self.store = store or ArtifactStore()
         self.registry = registry or ProvenanceRegistry()
-        # cache=None -> default ContentCache; cache=False -> caching disabled
-        self.cache = ContentCache() if cache is None else (cache or None)
+        # cache=None -> default MemoCache; cache=False -> caching disabled
+        self.cache = MemoCache() if cache is None else (cache or None)
         self.max_rounds = max_rounds
         self._register_design()
 
@@ -143,9 +144,20 @@ class PipelineManager:
 
     def _inject(self, task: str, input_name: str, payload: Any, region: str = "local"):
         """Edge-node sampling: wrap an external payload as an AV and deliver it
-        to a task input ('data are intentionally sampled by the edge nodes')."""
-        uri, chash = self.store.put(payload)
-        av = AnnotatedValue.produce(chash, uri, f"edge:{input_name}", "edge", region=region)
+        to a task input ('data are intentionally sampled by the edge nodes').
+        Ghost payloads (shape specs) ride the AV itself and never hit the
+        store — a wireframe run moves zero bytes end to end (§III.K)."""
+        if is_ghost(payload):
+            chash = content_hash(payload)
+            av = AnnotatedValue.produce(
+                chash, f"ghost://{chash}", f"edge:{input_name}", "edge",
+                region=region, meta={"ghost": True, "ghost_spec": payload},
+            )
+        else:
+            uri, chash = self.store.put(payload)
+            av = AnnotatedValue.produce(
+                chash, uri, f"edge:{input_name}", "edge", region=region
+            )
         self.registry.register_av(av)
         t = self.pipeline.tasks[task]
         av.stamp(t.name, "consumed", t.version, region=t.region)
@@ -262,9 +274,25 @@ class PipelineManager:
         return self.store.get(av.uri)
 
     def stats(self) -> dict:
+        store_stats = self.store.stats()
+        cache_stats = self.cache.stats() if self.cache else None
+        tasks = self.pipeline.tasks.values()
+        executions = sum(t.executions for t in tasks)
+        cache_hits = sum(t.cache_hits for t in tasks)
         return {
-            "store": self.store.stats(),
-            "cache": self.cache.stats() if self.cache else None,
+            "store": store_stats,
+            "cache": cache_stats,
+            "sustainability": {
+                # §III.F: work and transport avoided, not just work done.
+                # Derived from per-task counters so the scorecard stays
+                # per-pipeline even when the MemoCache/store are shared
+                # across workspaces (the "cache" block above is cache-global).
+                "executions": executions,
+                "cache_hits": cache_hits,
+                "executions_avoided": cache_hits,
+                "bytes_not_moved": store_stats["bytes_not_moved"]
+                + sum(t.bytes_saved for t in tasks),
+            },
             "tasks": {
                 n: {"executions": t.executions, "cache_hits": t.cache_hits}
                 for n, t in self.pipeline.tasks.items()

@@ -72,13 +72,24 @@ class _LinkBuffer:
         self.spec = spec
         self.window: deque = deque(maxlen=spec.buffer)
         self.fresh: deque = deque()  # values not yet consumed by a snapshot
+        self.arrival_seqs: deque = deque()  # global arrival order (merge FCFS)
         self.last_value: Any = None
         self.ever: bool = False
 
-    def push(self, value: Any) -> None:
+    def push(self, value: Any, seq: int = 0) -> None:
         self.fresh.append(value)
+        self.arrival_seqs.append(seq)
         self.last_value = value
         self.ever = True
+
+    def take(self) -> Any:
+        """Consume the oldest fresh value (keeps seq accounting in step)."""
+        self.arrival_seqs.popleft()
+        return self.fresh.popleft()
+
+    def take_seq(self) -> tuple:
+        """Consume the oldest fresh value with its global arrival seq."""
+        return self.arrival_seqs.popleft(), self.fresh.popleft()
 
     def fresh_count(self) -> int:
         return len(self.fresh)
@@ -108,12 +119,14 @@ class SnapshotPolicy:
         self.buffers = {s.name: _LinkBuffer(s) for s in specs}
         self.min_interval_s = min_interval_s
         self._last_fire = 0.0
+        self._arrival_seq = 0  # global arrival counter (merge FCFS ordering)
         self.snapshots_formed = 0
         self.rate_suppressions = 0
 
     # -- arrivals -------------------------------------------------------------
     def arrive(self, input_name: str, value: Any) -> None:
-        self.buffers[input_name].push(value)
+        self.buffers[input_name].push(value, seq=self._arrival_seq)
+        self._arrival_seq += 1
 
     # -- readiness ------------------------------------------------------------
     def _rate_ok(self) -> bool:
@@ -177,30 +190,33 @@ class SnapshotPolicy:
                 # snapshot), emit the last N
                 take = max(spec.fresh_needed, spec.buffer - len(b.window))
                 for _ in range(take):
-                    b.window.append(b.fresh.popleft())
+                    b.window.append(b.take())
                 out[name] = list(b.window)
             elif self.mode == "all_new":
-                vals = [b.fresh.popleft() for _ in range(spec.buffer)]
+                vals = [b.take() for _ in range(spec.buffer)]
                 out[name] = vals if spec.buffer > 1 else vals[0]
             else:  # swap_new_for_old
                 if b.fresh_count() >= spec.buffer:
-                    vals = [b.fresh.popleft() for _ in range(spec.buffer)]
+                    vals = [b.take() for _ in range(spec.buffer)]
                 else:
                     # reuse old values; consume whatever fresh exist
                     reuse = spec.buffer - b.fresh_count()
                     vals = [b.last_value] * reuse + [
-                        b.fresh.popleft() for _ in range(b.fresh_count())
+                        b.take() for _ in range(b.fresh_count())
                     ]
                 out[name] = vals if spec.buffer > 1 else vals[-1]
         return out
 
     def _merge_snapshot(self) -> list:
-        """FCFS merge of all links into one scalar stream."""
-        vals = []
+        """First-Come-First-Served merge of all links into one scalar
+        stream: values are ordered by *global* arrival time across links,
+        not by which link happens to drain first."""
+        tagged = []
         for b in self.buffers.values():
             while b.fresh:
-                vals.append(b.fresh.popleft())
-        return vals
+                tagged.append(b.take_seq())
+        tagged.sort(key=lambda sv: sv[0])
+        return [v for _, v in tagged]
 
     def stats(self) -> dict:
         return {

@@ -101,7 +101,12 @@ class ProvenanceRegistry:
     def lineage(self, av_uid: str, depth: int = -1) -> dict:
         """Recursive forensic reconstruction: which AVs (and software
         versions) led to this outcome — the paper's 'which changes triggered
-        the recomputation / which versions were involved'."""
+        the recomputation / which versions were involved'.
+
+        A memoized AV (one minted by a cache hit) carries a ``memo_of``
+        pointer to the AV the *original* run produced; the node includes that
+        run's lineage too, so a short-circuited result reconstructs exactly
+        like a computed one."""
         av = self._avs[av_uid]
         node = {
             "uid": av_uid,
@@ -113,10 +118,15 @@ class ProvenanceRegistry:
             "chash": av.chash,
             "parents": [],
         }
+        if av.meta.get("cache_hit"):
+            node["cache_hit"] = True
         if depth != 0:
             for p in self._lineage.get(av_uid, []):
                 if p in self._avs:
                     node["parents"].append(self.lineage(p, depth - 1))
+            memo_of = av.meta.get("memo_of")
+            if memo_of and memo_of in self._avs:
+                node["memo_of"] = self.lineage(memo_of, depth - 1)
         return node
 
     # -- story 2: checkpoint visitor log --------------------------------------

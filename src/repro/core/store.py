@@ -2,16 +2,24 @@
 
 Two tiers model the paper's "near and far" storage (§III.G):
 
-  - ``local``  — in-process dict (device/host memory analogue): fast, bounded.
+  - ``local``  — in-process dict (device/host memory analogue): fast, bounded,
+                 LRU-managed.
   - ``object`` — a directory on disk standing in for S3/MinIO object storage:
                  slower, durable, unbounded.
 
 The critical ratio  rho = avg latency(local) / avg latency(object)  is measured
 online from actual get() calls; placement policy consults it. The paper "bets on
 network attached storage" — we encode that as: artifacts above
-``local_bytes_limit`` go to the object tier, small/hot artifacts stay local, and
+``local_bytes_limit`` go to the object tier, small/hot artifacts stay local
+(evicting least-recently-used entries to the object tier on pressure), and
 Principle 2 (cache close to dependents) lets a consumer *pin* a remote artifact
-into its local tier.
+into its local tier — ``prefetch`` does so for a whole snapshot's inputs ahead
+of execution, counting cross-region traffic for the region audit.
+
+Transport avoidance is counted, not just claimed: a ``put`` whose content hash
+is already resident moves zero bytes and credits ``bytes_not_moved`` — the
+reference-handover half of the paper's sustainability argument (the memo layer
+in :mod:`repro.cache` counts the recompute-avoidance half).
 """
 
 from __future__ import annotations
@@ -21,7 +29,8 @@ import os
 import pickle
 import threading
 import time
-from typing import Any, Optional
+from collections import OrderedDict
+from typing import Any, Iterable, Optional, Union
 
 import numpy as np
 
@@ -43,7 +52,14 @@ class _Timer:
 
 
 class ArtifactStore:
-    """Content-addressed, tiered payload store. URIs: ``local://h``, ``object://h``."""
+    """Content-addressed, tiered payload store. URIs: ``local://h``, ``object://h``.
+
+    The local tier is an LRU: ``get``/``put``/``pin_local`` refresh recency,
+    and inserts over ``local_bytes_limit`` spill the least-recently-used
+    entries to the object tier. Without an object tier there is nowhere safe
+    to spill, so the local tier is allowed to grow past the limit rather than
+    drop the only copy of a payload.
+    """
 
     def __init__(
         self,
@@ -51,8 +67,9 @@ class ArtifactStore:
         local_bytes_limit: int = 1 << 28,  # 256 MiB of "device/host" tier
         region: str = "local",
     ) -> None:
-        self._local: dict = {}
+        self._local: OrderedDict = OrderedDict()  # hash -> payload, LRU order
         self._local_bytes = 0
+        self._sizes: dict = {}  # hash -> nbytes (every hash ever seen)
         self.local_bytes_limit = local_bytes_limit
         self.object_dir = object_dir
         self.region = region
@@ -60,7 +77,14 @@ class ArtifactStore:
         self._lat = {"local": _Timer(), "object": _Timer()}
         self.puts = 0
         self.gets = 0
+        self.pins = 0
+        self.prefetches = 0
         self.bytes_moved_to_object = 0
+        self.bytes_not_moved = 0
+        self.bytes_spilled = 0
+        self.evictions_local = 0
+        self.cross_region_pins = 0
+        self.cross_region_bytes = 0
         if object_dir:
             os.makedirs(object_dir, exist_ok=True)
 
@@ -87,76 +111,183 @@ class ArtifactStore:
         except Exception:
             return 1 << 12
 
+    def _object_path(self, h: str) -> Optional[str]:
+        if self.object_dir is None:
+            return None
+        return os.path.join(self.object_dir, h + ".pkl")
+
+    def _in_object(self, h: str) -> bool:
+        path = self._object_path(h)
+        return path is not None and os.path.exists(path)
+
+    def _write_object(self, h: str, payload: Any, nbytes: int) -> None:
+        path = self._object_path(h)
+        if os.path.exists(path):
+            return
+        t0 = time.perf_counter()
+        with open(path, "wb") as f:
+            self._dump(payload, f)
+        self._lat["object"].add(time.perf_counter() - t0)
+        self.bytes_moved_to_object += nbytes
+
+    # -- LRU management -----------------------------------------------------
+    def _insert_local(self, h: str, payload: Any, nbytes: int) -> None:
+        """Caller holds the lock. Insert (or refresh) a local entry, then
+        shed LRU entries to the object tier if over the limit — never the
+        entry just inserted (a pin must stick even when oversized)."""
+        if h in self._local:
+            self._local.move_to_end(h)
+            return
+        self._local[h] = payload
+        self._local_bytes += nbytes
+        self._sizes[h] = nbytes
+        self._enforce_limit(keep=h)
+
+    def _enforce_limit(self, keep: Optional[str] = None) -> None:
+        if self.object_dir is None:
+            return  # nowhere safe to spill
+        while self._local_bytes > self.local_bytes_limit:
+            victim = next((h for h in self._local if h != keep), None)
+            if victim is None:
+                break
+            payload = self._local.pop(victim)
+            nbytes = self._sizes.get(victim, self._nbytes(payload))
+            self._local_bytes -= nbytes
+            if not self._in_object(victim):
+                self._write_object(victim, payload, nbytes)
+                self.bytes_spilled += nbytes
+            self.evictions_local += 1
+
     # -- API ----------------------------------------------------------------
     def put(self, payload: Any, prefer: Optional[str] = None) -> tuple:
-        """Store payload; return (uri, content_hash). Reference-dedup by hash."""
+        """Store payload; return (uri, content_hash). Reference-dedup by hash:
+        re-putting resident content moves zero bytes (counted)."""
         h = content_hash(payload)
         nbytes = self._nbytes(payload)
         with self._lock:
             self.puts += 1
-            if f"local://{h}" in self._uris():
+            self._sizes.setdefault(h, nbytes)
+            if h in self._local:
+                self._local.move_to_end(h)
+                self.bytes_not_moved += nbytes
                 return f"local://{h}", h
+            if prefer != "local" and self._in_object(h):
+                self.bytes_not_moved += nbytes
+                return f"object://{h}", h
             tier = prefer
             if tier is None:
-                tier = (
-                    "local"
-                    if self._local_bytes + nbytes <= self.local_bytes_limit
-                    else "object"
-                )
+                tier = "local" if nbytes <= self.local_bytes_limit else "object"
             if tier == "object" and self.object_dir is None:
                 tier = "local"  # no object tier configured
             if tier == "local":
-                self._local[h] = payload
-                self._local_bytes += nbytes
+                self._insert_local(h, payload, nbytes)
                 return f"local://{h}", h
-            path = os.path.join(self.object_dir, h + ".pkl")
-            if not os.path.exists(path):
-                t0 = time.perf_counter()
-                with open(path, "wb") as f:
-                    self._dump(payload, f)
-                self._lat["object"].add(time.perf_counter() - t0)
-                self.bytes_moved_to_object += nbytes
+            self._write_object(h, payload, nbytes)
             return f"object://{h}", h
 
     def get(self, uri: str) -> Any:
+        """Resolve a reference to its payload. The tier in the URI is a
+        placement *hint*, not a location contract: a ``local://`` reference
+        whose entry was LRU-spilled after the URI was issued falls back to
+        the object tier transparently (content addressing means the hash is
+        the identity; the tier may drift underneath old AVs and memo
+        records)."""
         tier, h = uri.split("://", 1)
+        if tier == "ghost":
+            raise KeyError(
+                f"ghost artifact {uri} has no payload — ghost runs never "
+                f"materialize (§III.K); the spec rides on the AV metadata"
+            )
         self.gets += 1
         t0 = time.perf_counter()
         if tier == "local":
-            payload = self._local[h]
-            self._lat["local"].add(time.perf_counter() - t0)
-            return payload
-        path = os.path.join(self.object_dir, h + ".pkl")
+            with self._lock:
+                if h in self._local:
+                    payload = self._local[h]
+                    self._local.move_to_end(h)
+                    self._lat["local"].add(time.perf_counter() - t0)
+                    return payload
+            if not self._in_object(h):
+                raise KeyError(h)
+        path = self._object_path(h)
         with open(path, "rb") as f:
             payload = self._load(f)
         self._lat["object"].add(time.perf_counter() - t0)
         return payload
 
-    def pin_local(self, uri: str) -> str:
-        """Principle 2: cache a (possibly remote) artifact close to a dependent."""
+    def pin_local(self, uri: str, *, region: Optional[str] = None) -> str:
+        """Principle 2: cache a (possibly remote) artifact close to a
+        dependent. Idempotent — re-pinning a resident hash refreshes recency
+        and counts no bytes. ``region`` is the artifact's origin region;
+        pins crossing into this store's region are tallied for the audit."""
         tier, h = uri.split("://", 1)
-        if tier == "local":
-            return uri
-        payload = self.get(uri)
         with self._lock:
-            self._local[h] = payload
-            self._local_bytes += self._nbytes(payload)
+            if h in self._local:
+                self._local.move_to_end(h)
+                return f"local://{h}"
+        payload = self.get(uri)
+        nbytes = self._sizes.get(h) or self._nbytes(payload)
+        with self._lock:
+            if h not in self._local:
+                self.pins += 1
+                if region is not None and region != self.region:
+                    self.cross_region_pins += 1
+                    self.cross_region_bytes += nbytes
+                self._insert_local(h, payload, nbytes)
         return f"local://{h}"
 
+    def prefetch(self, refs: Iterable[Union[str, tuple]]) -> int:
+        """Pin a batch of artifacts ahead of a consumer forming a snapshot.
+
+        ``refs`` holds ``uri`` strings or ``(uri, origin_region)`` pairs;
+        ghost references are skipped (nothing to move). Returns the number
+        of artifacts now resident in the local tier.
+        """
+        n = 0
+        self.prefetches += 1
+        for ref in refs:
+            uri, region = ref if isinstance(ref, tuple) else (ref, None)
+            if uri.startswith("ghost://"):
+                continue
+            self.pin_local(uri, region=region)
+            n += 1
+        return n
+
     def evict_local(self, uri: str) -> None:
+        """Drop a local entry. With an object tier configured, the payload is
+        spilled there first if it holds no copy, so the artifact stays
+        resolvable. Without an object tier the caller is explicitly
+        discarding the only copy — later ``get``s of this hash will raise."""
         _, h = uri.split("://", 1)
         with self._lock:
             payload = self._local.pop(h, None)
-            if payload is not None:
-                self._local_bytes -= self._nbytes(payload)
+            if payload is None:
+                return
+            nbytes = self._sizes.get(h, self._nbytes(payload))
+            self._local_bytes -= nbytes
+            if self.object_dir is not None and not self._in_object(h):
+                self._write_object(h, payload, nbytes)
+                self.bytes_spilled += nbytes
+            self.evictions_local += 1
 
     def has(self, uri: str) -> bool:
+        """Tier-strict residency check (is it in *that* tier right now)."""
         tier, h = uri.split("://", 1)
         if tier == "local":
             return h in self._local
-        return self.object_dir is not None and os.path.exists(
-            os.path.join(self.object_dir, h + ".pkl")
-        )
+        return self._in_object(h)
+
+    def resolvable(self, uri: str) -> bool:
+        """Content check: can this store produce the payload from *either*
+        tier, regardless of the tier hint in the URI? (Used to reject memo
+        records minted against a different store.)"""
+        tier, h = uri.split("://", 1)
+        if tier == "ghost":
+            return False
+        with self._lock:
+            if h in self._local:
+                return True
+        return self._in_object(h)
 
     def _uris(self):
         return {f"local://{k}" for k in self._local}
@@ -182,7 +313,15 @@ class ArtifactStore:
         return {
             "puts": self.puts,
             "gets": self.gets,
+            "pins": self.pins,
+            "prefetches": self.prefetches,
             "local_bytes": self._local_bytes,
+            "local_items": len(self._local),
             "bytes_moved_to_object": self.bytes_moved_to_object,
+            "bytes_not_moved": self.bytes_not_moved,
+            "bytes_spilled": self.bytes_spilled,
+            "evictions_local": self.evictions_local,
+            "cross_region_pins": self.cross_region_pins,
+            "cross_region_bytes": self.cross_region_bytes,
             "rho": self.rho,
         }

@@ -17,8 +17,9 @@ import inspect
 import time
 from typing import Any, Callable, Optional
 
-from .av import AnnotatedValue, content_hash
-from .cache import ContentCache, snapshot_key
+from repro.cache import MemoCache, make_record, snapshot_key
+
+from .av import AnnotatedValue, content_hash, is_ghost
 from .policy import InputSpec, SnapshotPolicy
 from .provenance import ProvenanceRegistry
 from .store import ArtifactStore
@@ -92,6 +93,7 @@ class SmartTask:
         self.source = source
         self.executions = 0
         self.cache_hits = 0
+        self.bytes_saved = 0  # output bytes this task's memo hits never remade
         # wired by Pipeline
         self.in_links: dict = {}  # input name -> SmartLink
         self.out_links: dict = {}  # output name -> [SmartLink]
@@ -122,10 +124,15 @@ class SmartTask:
         self,
         store: ArtifactStore,
         registry: ProvenanceRegistry,
-        cache: Optional[ContentCache] = None,
+        cache: Optional[MemoCache] = None,
     ) -> dict:
-        """Form a snapshot, consult the cache, run user code if needed, and
-        emit output AVs onto outgoing links. Returns {output_name: AV}."""
+        """Form a snapshot, consult the memo cache, run user code if needed,
+        and emit output AVs onto outgoing links. Returns {output_name: AV}.
+
+        Payloads are fetched lazily: links carried only ``(uri, chash)``
+        references, and bytes move just before user code runs — a memo hit
+        (or a ghost run) therefore moves nothing at all.
+        """
         snap = self.policy.snapshot()
         in_hashes, parent_uids = {}, []
         for name, val in snap.items():
@@ -137,10 +144,18 @@ class SmartTask:
                 registry.log_visit(self.name, av.uid, "arrived", self.version)
             in_hashes[name] = hs if isinstance(val, list) else hs[0]
 
-        extra = ";".join(
+        # The output-name promise is part of the key: two tasks sharing one
+        # fn but promising different outputs are different computations (a
+        # replayed record would emit the wrong names and silently drop the
+        # emission). Same fn + same promise still dedups across tasks —
+        # that's content identity, the point of make semantics.
+        svc = ";".join(
             f"{n}:{s.version}:{len(s.frozen_responses)}" for n, s in self.services.items()
         )
-        key = snapshot_key(self.version, in_hashes, extra=extra)
+        extra = f"out={','.join(self.outputs)};{svc}"
+        key = snapshot_key(
+            self.version, in_hashes, extra=extra, policy_mode=self.policy.mode
+        )
 
         # Source tasks are sensors: each firing is a fresh observation of the
         # world, never a cacheable pure function of (no) inputs.
@@ -149,28 +164,54 @@ class SmartTask:
 
         if cache is not None:
             rec = cache.lookup(key)
+            if rec is not None and not all(
+                store.resolvable(uri) for uri, _ in rec["outputs"].values()
+            ):
+                # Record minted against a different store (a shared MemoCache
+                # outlives any one workspace): its URIs don't resolve here,
+                # so treat it as a miss and recompute rather than replay
+                # dangling references.
+                rec = None
             if rec is not None:
                 self.cache_hits += 1
+                saved = (
+                    sum(int(n) for n in rec.get("out_nbytes", {}).values())
+                    if isinstance(rec, dict)
+                    else 0
+                )
+                self.bytes_saved += saved
+                credit = getattr(cache, "credit_hit", None)
+                if credit is not None:
+                    credit(rec)
+                out_uids = rec.get("out_uids", {}) if isinstance(rec, dict) else {}
                 out_avs = {}
                 for oname, (uri, chash) in rec["outputs"].items():
+                    orig_uid = out_uids.get(oname)
+                    meta = {"cache_hit": True}
+                    if orig_uid:
+                        meta["memo_of"] = orig_uid
                     av = AnnotatedValue.produce(
                         chash, uri, self.name, self.version, region=self.region,
-                        meta={"cache_hit": True},
+                        meta=meta,
                     )
                     av.stamp(self.name, "cached", self.version, region=self.region)
                     registry.register_av(av, parents=parent_uids)
-                    registry.log_visit(self.name, av.uid, "cache_hit", self.version)
+                    registry.log_visit(
+                        self.name, av.uid, "cache_hit", self.version,
+                        note=f"memo_of={orig_uid}" if orig_uid else "",
+                    )
                     out_avs[oname] = av
                 self._emit(out_avs)
                 return out_avs
 
-        # materialize payloads (Principle 2: pin near the dependent)
+        # materialize payloads (Principle 2: pin near the dependent) — this
+        # is the only point where input bytes actually move
         kwargs = {}
         for name, val in snap.items():
             if isinstance(val, list):
-                kwargs[name] = [store.get(store.pin_local(a.uri)) for a in val]
+                kwargs[name] = [self._materialize(store, a) for a in val]
             else:
-                kwargs[name] = store.get(store.pin_local(val.uri))
+                kwargs[name] = self._materialize(store, val)
         for sname, svc in self.services.items():
             kwargs[sname] = svc
 
@@ -193,21 +234,46 @@ class SmartTask:
         if missing:
             raise KeyError(f"task {self.name} missing outputs {sorted(missing)}")
 
-        out_avs, cache_rec = {}, {"software_version": self.version, "outputs": {}}
+        out_avs, outputs_rec, out_uids, out_nbytes = {}, {}, {}, {}
+        any_ghost = False
         for oname in self.outputs:
             payload = result[oname]
-            uri, chash = store.put(payload)
-            av = AnnotatedValue.produce(
-                chash, uri, self.name, self.version, region=self.region
-            )
+            if is_ghost(payload):
+                # Ghost outputs never touch the store: the shape spec *is*
+                # the metadata, and it rides on the AV itself (§III.K).
+                any_ghost = True
+                chash = content_hash(payload)
+                av = AnnotatedValue.produce(
+                    chash, f"ghost://{chash}", self.name, self.version,
+                    region=self.region, meta={"ghost": True, "ghost_spec": payload},
+                )
+            else:
+                uri, chash = store.put(payload)
+                av = AnnotatedValue.produce(
+                    chash, uri, self.name, self.version, region=self.region
+                )
+                outputs_rec[oname] = (uri, chash)
+                out_uids[oname] = av.uid
+                out_nbytes[oname] = store._nbytes(payload)
             registry.register_av(av, parents=parent_uids)
             registry.log_visit(self.name, av.uid, "emitted", self.version)
             out_avs[oname] = av
-            cache_rec["outputs"][oname] = (uri, chash)
-        if cache is not None:
-            cache.insert(key, cache_rec, ttl_s=self.cache_ttl_s)
+        if cache is not None and not any_ghost:
+            cache.insert(
+                key,
+                make_record(self.version, outputs_rec, out_uids, out_nbytes),
+                ttl_s=self.cache_ttl_s,
+            )
         self._emit(out_avs)
         return out_avs
+
+    @staticmethod
+    def _materialize(store: ArtifactStore, av: AnnotatedValue) -> Any:
+        """Lazy payload fetch: ghosts resolve from AV metadata (zero bytes);
+        real artifacts are pinned near this consumer and read locally."""
+        if av.uri.startswith("ghost://"):
+            return av.meta.get("ghost_spec")
+        return store.get(store.pin_local(av.uri, region=av.region))
 
     def _emit(self, out_avs: dict) -> None:
         self.last_outputs.update(out_avs)

@@ -9,6 +9,11 @@ under ``jax.eval_shape`` — zero FLOPs, zero bytes moved — while the AV
 machinery (links, stamps, visitor logs, region transits) runs for real. The
 result is the routing trace plus the shape contract of every wire.
 
+Ghost values never touch the :class:`~repro.core.store.ArtifactStore`: the
+shape spec rides on the AV itself (``meta["ghost_spec"]``, ``ghost://``
+URIs), so a wireframe run leaves the store's put/get counters at exactly
+zero — the strongest form of the paper's transport-avoidance claim.
+
 On the distributed side this concept *is* the multi-pod dry-run
 (``repro.launch.dryrun``): lower + compile against ghost inputs proves the
 sharded wiring without allocating a byte.

@@ -66,6 +66,8 @@ def build_data_pipeline(
     seq_len: int,
     seed: int = 0,
     rows_per_pack: Optional[int] = None,
+    store=None,
+    cache=None,
 ) -> Workspace:
     """sample -> pack -> batch declared as a Workspace circuit.
 
@@ -74,6 +76,11 @@ def build_data_pipeline(
     A lone ``ws.pull("batch")`` cannot fill the ``doc[4]``/``panel[N]``
     buffers — one pull fires the sensor once — so pull only resolves after
     the circuit has produced a batch (it then returns the cached artifact).
+
+    ``store``/``cache`` pass through to the Workspace: a bounded
+    :class:`~repro.core.store.ArtifactStore` gives the batch stream an LRU
+    local tier, and the shared :class:`~repro.cache.MemoCache` means a
+    replayed shard (identical docs) re-packs and re-batches for free.
     """
     src = TokenSource(cfg, seq_len, seed)
     rows = rows_per_pack or max(1, global_batch // 8)
@@ -97,7 +104,7 @@ def build_data_pipeline(
             full = np.concatenate([full, full], axis=0)[:global_batch]
         return {"batch": {"tokens": full[:, :-1], "labels": full[:, 1:].copy()}}
 
-    ws = Workspace("data")
+    ws = Workspace("data", store=store, cache=cache)
     sample_t = ws.source(sample, name="sample", outputs=["doc"])
     # pack buffers 4 docs per panel; batch consumes n_panels fresh panels
     n_panels = max(1, global_batch // rows)

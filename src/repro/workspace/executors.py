@@ -27,21 +27,46 @@ class Executor(Protocol):
 
     def inject(self, manager, task: str, input_name: str, payload: Any, region: str): ...
 
+    def stats(self) -> dict: ...
+
 
 class InlineExecutor:
-    """Run tasks in-process on the shared trigger engine."""
+    """Run tasks in-process on the shared trigger engine.
+
+    Counts every engine call it drives, so ``Workspace.stats()`` can report
+    how much *triggering* happened alongside how much work and transport the
+    memo/store layers avoided (§III.F)."""
+
+    def __init__(self) -> None:
+        self.pushes = 0
+        self.pulls = 0
+        self.samples = 0
+        self.injects = 0
 
     def push(self, manager, task: str, payloads: dict, region: str) -> dict:
+        self.pushes += 1
         return manager._push(task, region=region, **payloads)
 
     def pull(self, manager, target: str) -> dict:
+        self.pulls += 1
         return manager._pull(target)
 
     def sample(self, manager, source: str) -> dict:
+        self.samples += 1
         return manager._sample(source)
 
     def inject(self, manager, task: str, input_name: str, payload: Any, region: str):
+        self.injects += 1
         return manager._inject(task, input_name, payload, region=region)
+
+    def stats(self) -> dict:
+        return {
+            "backend": type(self).__name__,
+            "pushes": self.pushes,
+            "pulls": self.pulls,
+            "samples": self.samples,
+            "injects": self.injects,
+        }
 
     def __repr__(self) -> str:
         return "InlineExecutor()"
@@ -66,6 +91,7 @@ class MeshExecutor(InlineExecutor):
         mode: str = "train",
         global_batch: Optional[int] = None,
     ) -> None:
+        super().__init__()
         if mesh is None:
             from repro.launch.mesh import make_host_mesh
 
@@ -116,6 +142,12 @@ class MeshExecutor(InlineExecutor):
         if self.rules is not None:
             kwargs.setdefault("rules", self.rules)
         return make_serve_fns(model, self.mesh, **kwargs)
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out["mesh"] = dict(self.mesh.shape)
+        out["mode"] = self.mode
+        return out
 
     def __repr__(self) -> str:
         shape = dict(self.mesh.shape)

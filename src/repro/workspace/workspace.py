@@ -28,8 +28,8 @@ from __future__ import annotations
 
 from typing import Any, Callable, Iterable, Mapping, Optional, Union
 
+from repro.cache import MemoCache
 from repro.core.av import AnnotatedValue
-from repro.core.cache import ContentCache
 from repro.core.pipeline import Pipeline, PipelineManager
 from repro.core.policy import InputSpec
 from repro.core.provenance import ProvenanceRegistry
@@ -152,8 +152,8 @@ class Workspace:
         self.executor = executor or InlineExecutor()
         self._store = store or ArtifactStore()
         self._registry = registry or ProvenanceRegistry()
-        # cache=None -> default ContentCache; cache=False -> caching disabled
-        self._cache = ContentCache() if cache is None else cache
+        # cache=None -> default MemoCache; cache=False -> caching disabled
+        self._cache = MemoCache() if cache is None else cache
         self._max_rounds = max_rounds
         self._decls: dict = {}
         self._wires: list = []
@@ -506,7 +506,13 @@ class Workspace:
         return self._registry.design_map_text()
 
     def stats(self) -> dict:
-        return self._build().stats()
+        """Engine stats plus this workspace's executor counters. The
+        ``sustainability`` block is the paper's §III.F scorecard: executions
+        avoided by the memo layer and bytes the circuit never moved."""
+        out = self._build().stats()
+        stats_fn = getattr(self.executor, "stats", None)
+        out["executor"] = stats_fn() if stats_fn is not None else None
+        return out
 
     def tasks(self) -> list:
         return sorted(self._handles)

@@ -1,0 +1,243 @@
+"""ArtifactStore tier mechanics (LRU / spill / pin) and SnapshotPolicy
+edge cases (merge FCFS ordering, first-window fill, rate suppression).
+
+Satellite coverage for ISSUE 2: the store's local tier is a bounded LRU
+over a durable object tier; pinning is idempotent and honors the byte
+limit; policies behave at their boundaries.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import ArtifactStore, SnapshotPolicy
+
+
+def _arr(n, fill):
+    return np.full(n, fill, dtype=np.uint8)  # n bytes exactly
+
+
+# ---------------------------------------------------------------------------
+# LRU eviction and spill
+# ---------------------------------------------------------------------------
+
+
+def test_lru_spills_oldest_to_object_tier(tmp_path):
+    store = ArtifactStore(object_dir=str(tmp_path), local_bytes_limit=256)
+    uris = [store.put(_arr(100, i))[0] for i in range(3)]  # 300B > 256B
+    stats = store.stats()
+    assert stats["evictions_local"] == 1
+    assert stats["bytes_spilled"] == 100
+    assert stats["local_bytes"] <= 256
+    # the spilled artifact is still retrievable (now from the object tier)
+    _, h0 = uris[0].split("://", 1)
+    assert not store.has(f"local://{h0}")
+    np.testing.assert_array_equal(store.get(f"object://{h0}"), _arr(100, 0))
+
+
+def test_lru_get_refreshes_recency(tmp_path):
+    store = ArtifactStore(object_dir=str(tmp_path), local_bytes_limit=256)
+    uri_a, _ = store.put(_arr(100, 1))
+    uri_b, _ = store.put(_arr(100, 2))
+    store.get(uri_a)  # touch a: b becomes least recently used
+    store.put(_arr(100, 3))  # forces one eviction
+    assert store.has(uri_a), "recently-used entry must survive"
+    assert not store.has(uri_b), "LRU entry must be the one evicted"
+
+
+def test_oversized_artifact_goes_straight_to_object(tmp_path):
+    store = ArtifactStore(object_dir=str(tmp_path), local_bytes_limit=64)
+    uri, _ = store.put(_arr(1000, 7))
+    assert uri.startswith("object://")
+    assert store.stats()["local_bytes"] == 0
+
+
+def test_no_object_tier_means_no_eviction():
+    store = ArtifactStore(local_bytes_limit=64)
+    for i in range(4):
+        store.put(_arr(100, i))
+    stats = store.stats()
+    assert stats["evictions_local"] == 0
+    assert stats["local_bytes"] == 400  # allowed past the limit: nowhere to spill
+
+
+def test_evict_local_spills_only_copy(tmp_path):
+    store = ArtifactStore(object_dir=str(tmp_path), local_bytes_limit=1 << 20)
+    uri, h = store.put(_arr(50, 9))
+    store.evict_local(uri)
+    assert store.stats()["local_bytes"] == 0
+    np.testing.assert_array_equal(store.get(f"object://{h}"), _arr(50, 9))
+
+
+# ---------------------------------------------------------------------------
+# pin_local: idempotence, limit, region accounting (ISSUE 2 satellite fix)
+# ---------------------------------------------------------------------------
+
+
+def test_pin_local_idempotent_no_double_count(tmp_path):
+    store = ArtifactStore(object_dir=str(tmp_path), local_bytes_limit=1 << 20)
+    uri, _ = store.put(_arr(100, 1), prefer="object")
+    assert uri.startswith("object://")
+    p1 = store.pin_local(uri)
+    bytes_after_first = store.stats()["local_bytes"]
+    p2 = store.pin_local(uri)
+    assert p1 == p2
+    assert store.stats()["local_bytes"] == bytes_after_first == 100
+    assert store.stats()["pins"] == 1
+
+
+def test_pin_local_respects_limit_by_evicting_others(tmp_path):
+    store = ArtifactStore(object_dir=str(tmp_path), local_bytes_limit=256)
+    store.put(_arr(100, 1))
+    store.put(_arr(100, 2))
+    big_uri, _ = store.put(_arr(200, 3), prefer="object")
+    store.pin_local(big_uri)  # 200B pin into 200/256 used -> evicts LRU
+    stats = store.stats()
+    assert stats["local_bytes"] <= 256
+    _, h = big_uri.split("://", 1)
+    assert store.has(f"local://{h}"), "the pin itself must stick"
+
+
+def test_pin_local_counts_cross_region_traffic(tmp_path):
+    store = ArtifactStore(object_dir=str(tmp_path), region="us")
+    uri, _ = store.put(_arr(100, 5), prefer="object")
+    store.pin_local(uri, region="eu")  # artifact originated in eu
+    stats = store.stats()
+    assert stats["cross_region_pins"] == 1
+    assert stats["cross_region_bytes"] == 100
+    # same-region pins are free of audit weight
+    uri2, _ = store.put(_arr(40, 6), prefer="object")
+    store.pin_local(uri2, region="us")
+    assert store.stats()["cross_region_pins"] == 1
+
+
+def test_put_dedup_counts_bytes_not_moved():
+    store = ArtifactStore()
+    store.put(_arr(100, 1))
+    store.put(_arr(100, 1))  # identical content: reference handover
+    store.put(_arr(100, 1))
+    assert store.stats()["bytes_not_moved"] == 200
+    assert store.stats()["local_bytes"] == 100
+
+
+def test_prefetch_pins_batch_and_skips_ghosts(tmp_path):
+    store = ArtifactStore(object_dir=str(tmp_path))
+    u1, _ = store.put(_arr(10, 1), prefer="object")
+    u2, _ = store.put(_arr(10, 2), prefer="object")
+    n = store.prefetch([(u1, "eu"), u2, "ghost://abc"])
+    assert n == 2
+    assert store.stats()["prefetches"] == 1
+    assert store.has(u1.replace("object", "local"))
+
+
+def test_ghost_uri_get_raises():
+    store = ArtifactStore()
+    with pytest.raises(KeyError, match="ghost"):
+        store.get("ghost://deadbeef")
+
+
+def test_stale_local_uri_falls_back_to_object_after_spill(tmp_path):
+    """A local:// reference issued before an LRU spill must keep resolving:
+    the hash is the identity, the tier is only a placement hint."""
+    store = ArtifactStore(object_dir=str(tmp_path), local_bytes_limit=256)
+    stale_uri, _ = store.put(_arr(100, 1))
+    assert stale_uri.startswith("local://")
+    store.put(_arr(100, 2))
+    store.put(_arr(100, 3))  # spills the first artifact to the object tier
+    assert not store.has(stale_uri)
+    np.testing.assert_array_equal(store.get(stale_uri), _arr(100, 1))
+    pinned = store.pin_local(stale_uri)
+    assert store.has(pinned)
+
+
+def test_missing_local_uri_without_object_copy_raises():
+    store = ArtifactStore()
+    with pytest.raises(KeyError):
+        store.get("local://not-there")
+
+
+def test_is_ghost_requires_explicit_opt_in():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import is_ghost
+    from repro.core.wireframe import GhostValue
+
+    assert is_ghost(jax.ShapeDtypeStruct((4,), jnp.float32))
+    assert is_ghost(GhostValue("g"))
+    assert not is_ghost(np.ones(4))
+
+    class ShapedButNoNbytes:  # sparse-matrix-like: data, not a ghost
+        shape = (4, 4)
+        dtype = "float64"
+
+    assert not is_ghost(ShapedButNoNbytes())
+
+
+# ---------------------------------------------------------------------------
+# SnapshotPolicy edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_merge_is_fcfs_across_links():
+    p = SnapshotPolicy(["a", "b"], mode="merge")
+    p.arrive("b", 1)  # global arrival order: b, a, b, a
+    p.arrive("a", 2)
+    p.arrive("b", 3)
+    p.arrive("a", 4)
+    assert p.ready()
+    assert p.snapshot() == {"merged": [1, 2, 3, 4]}
+    assert not p.ready()
+
+
+def test_merge_rejects_buffered_inputs():
+    with pytest.raises(ValueError, match="FCFS"):
+        SnapshotPolicy(["a[4]"], mode="merge")
+
+
+def test_first_window_must_fill_completely():
+    p = SnapshotPolicy(["x[3/1]"], mode="all_new")
+    p.arrive("x", 1)
+    p.arrive("x", 2)
+    assert not p.ready(), "first snapshot needs the whole window (3 fresh)"
+    p.arrive("x", 3)
+    assert p.ready()
+    assert p.snapshot() == {"x": [1, 2, 3]}
+    # subsequent snapshots advance by k=1
+    p.arrive("x", 4)
+    assert p.ready()
+    assert p.snapshot() == {"x": [2, 3, 4]}
+
+
+def test_window_slide_consumes_exactly_k():
+    p = SnapshotPolicy(["x[4/2]"], mode="all_new")
+    for v in range(1, 5):
+        p.arrive("x", v)
+    assert p.snapshot() == {"x": [1, 2, 3, 4]}
+    p.arrive("x", 5)
+    assert not p.ready(), "k=2 fresh values required to advance"
+    p.arrive("x", 6)
+    assert p.snapshot() == {"x": [3, 4, 5, 6]}
+
+
+def test_rate_suppression_counts_only_with_pending_data():
+    p = SnapshotPolicy(["a"], mode="all_new", min_interval_s=30.0)
+    p._last_fire = time.time()  # simulate a just-fired task
+    assert not p.ready()
+    assert p.stats()["rate_suppressions"] == 0, "no data, no suppression"
+    p.arrive("a", 1)
+    assert not p.ready()
+    assert not p.ready()
+    assert p.stats()["rate_suppressions"] == 2, "each denied check counts"
+    assert p.stats()["pending"] == {"a": 1}
+
+
+def test_swap_new_for_old_reuses_stale_inputs():
+    p = SnapshotPolicy(["a", "b"], mode="swap_new_for_old")
+    p.arrive("a", 1)
+    p.arrive("b", 2)
+    assert p.snapshot() == {"a": 1, "b": 2}
+    p.arrive("b", 3)  # only b refreshed
+    assert p.ready()
+    assert p.snapshot() == {"a": 1, "b": 3}
