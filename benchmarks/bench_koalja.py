@@ -5,8 +5,14 @@ each bench pins one qualitative claim to a number).
   B2  make-mode cache reuse    §III.F  "sparse updates allow enormous savings"
   B3  transport avoidance      §III.F  references vs payloads on links
   B4  notification vs polling  §III.F  Principle 1 (timescale separation)
-  B5  snapshot policy cost     §III.I  all_new / swap / merge / window
+  B5  snapshot policy cost     §III.I  all_new / swap / merge / window, plus
+                                       the event scheduler's enqueued-vs-scan
+                                       trigger-work scorecard
   B6  wireframing              §III.K  ghost batches expose routing at ~zero cost
+  B7  concurrent fan-out       §III.J  waves of independent ready tasks run in
+                                       parallel (ConcurrentExecutor) with
+                                       provenance/merge-FCFS bit-identical to
+                                       the serial backend
   B8  repeated push            §III.F  semantic memoization short-circuits the
                                        hot path: unchanged inputs re-pushed N
                                        times execute ~once and move ~no bytes
@@ -19,7 +25,7 @@ import time
 import numpy as np
 
 from repro.core import SnapshotPolicy
-from repro.workspace import Workspace
+from repro.workspace import ConcurrentExecutor, InlineExecutor, Workspace
 
 
 def _mlp_workspace(heavy_ms: float = 0.0, cache=None) -> Workspace:
@@ -175,7 +181,110 @@ def bench_policy_throughput():
             snaps += 1
     dt = time.perf_counter() - t0
     out["window_16_4"] = {"arrivals_per_s": N / dt, "snapshots": snaps}
+    out["scheduler_vs_polling"] = _bench_scheduler_vs_polling()
     return out
+
+
+def _bench_scheduler_vs_polling(pushes: int = 200, cold_tasks: int = 13):
+    """Trigger-work scorecard on a sparse circuit: a hot 3-stage chain inside
+    a larger breadboard. The event scheduler enqueues only the notified
+    tasks; the seed's polling engine would have rescanned every task every
+    round. (The ISSUE 3 acceptance criterion: enqueued << scan-equivalent,
+    results unchanged.)"""
+    ws = Workspace("sparse", cache=False)
+    a = ws.task(lambda x: {"y": x + 1}, name="a", inputs=["x"], outputs=["y"])
+    b = ws.task(lambda x: {"y": x + 1}, name="b", inputs=["x"], outputs=["y"])
+    c = ws.task(lambda x: {"y": x + 1}, name="c", inputs=["x"], outputs=["y"])
+    a["y"] >> b["x"]
+    b["y"] >> c["x"]
+    for i in range(cold_tasks):
+        ws.task(lambda q: {"r": q}, name=f"cold{i}", inputs=["q"], outputs=["r"])
+    t0 = time.perf_counter()
+    for i in range(pushes):
+        ws.push("a", x=i)
+    dt = time.perf_counter() - t0
+    final = ws.value_of(ws.pipeline.tasks["c"].last_outputs["y"])
+    sched = ws.stats()["scheduler"]
+    return {
+        "tasks_in_circuit": 3 + cold_tasks,
+        "pushes": pushes,
+        "events_per_s": pushes / dt,
+        "tasks_enqueued": sched["tasks_enqueued"],
+        "polling_scan_equivalent": sched["polling_scan_equivalent"],
+        "scan_reduction_x": sched["scan_reduction_x"],
+        "result_check": final == pushes - 1 + 3,
+    }
+
+
+def _fanout_workspace(width: int, heavy_ms: float, executor) -> Workspace:
+    """src fans one push out to `width` independent workers (distinct input
+    content per worker, so nothing memo-collides), merge-FCFS into a sink."""
+    ws = Workspace("fanout", executor=executor)
+    outs = [f"o{i}" for i in range(width)]
+
+    def src(x):
+        return {f"o{i}": x + i for i in range(width)}
+
+    s = ws.task(src, name="src", inputs=["x"], outputs=outs)
+
+    def work(v):
+        time.sleep(heavy_ms / 1e3)
+        return {"w": v * 2}
+
+    sink = ws.task(
+        lambda merged: {"total": list(merged)},
+        name="sink",
+        inputs=[f"i{i}" for i in range(width)],
+        outputs=["total"],
+        mode="merge",
+    )
+    for i in range(width):
+        w = ws.task(work, name=f"w{i}", inputs=["v"], outputs=["w"])
+        s[f"o{i}"] >> w["v"]
+        w["w"] >> sink[f"i{i}"]
+    return ws
+
+
+def bench_concurrent_fanout(width: int = 8, heavy_ms: float = 5.0, pushes: int = 4):
+    """ISSUE 3 acceptance: an 8-wide fan-out of 5 ms tasks must run >=2x
+    faster under ConcurrentExecutor(max_workers=8) than InlineExecutor,
+    while sustainability stats, provenance event counts, and the merge-FCFS
+    order stay identical (deferred serial emission)."""
+    runs = {}
+    for label, executor in (
+        ("inline", InlineExecutor()),
+        ("concurrent", ConcurrentExecutor(max_workers=width)),
+    ):
+        ws = _fanout_workspace(width, heavy_ms, executor)
+        t0 = time.perf_counter()
+        for i in range(pushes):
+            ws.push("src", x=i * 1000)  # distinct content every push
+        wall = time.perf_counter() - t0
+        stats = ws.stats()
+        events = sorted(
+            (t, e["event"]) for t in ws.tasks() for e in ws.visitor_log(t)
+        )
+        runs[label] = {
+            "wall_s": wall,
+            "sustainability": stats["sustainability"],
+            "events": events,
+            "merge_order": ws.value_of(
+                ws.pipeline.tasks["sink"].last_outputs["total"]
+            ),
+            "waves": stats["scheduler"]["waves"],
+        }
+    inline, conc = runs["inline"], runs["concurrent"]
+    return {
+        "width": width,
+        "heavy_ms": heavy_ms,
+        "pushes": pushes,
+        "wall_inline_s": inline["wall_s"],
+        "wall_concurrent_s": conc["wall_s"],
+        "speedup": inline["wall_s"] / max(conc["wall_s"], 1e-9),
+        "sustainability_identical": inline["sustainability"] == conc["sustainability"],
+        "provenance_events_identical": inline["events"] == conc["events"],
+        "merge_fcfs_identical": inline["merge_order"] == conc["merge_order"],
+    }
 
 
 def bench_wireframe():
@@ -251,5 +360,6 @@ ALL = {
     "B4_notification_vs_polling": bench_notification_vs_polling,
     "B5_policy_throughput": bench_policy_throughput,
     "B6_wireframe": bench_wireframe,
+    "B7_concurrent_fanout": bench_concurrent_fanout,
     "B8_repeated_push": bench_repeated_push,
 }

@@ -1,10 +1,16 @@
 """Benchmark harness: `PYTHONPATH=src python -m benchmarks.run`.
 
-Runs the six paper-claim benchmarks (B1-B6) plus the data-pipeline
-throughput bench, prints the results, and writes
-benchmarks/results/koalja_bench.json. The roofline tables are produced
-separately by `python -m repro.launch.dryrun --all` + `benchmarks.report`
-(they need the 512-device env, which must not leak into this process).
+Runs the paper-claim benchmarks (B1-B8) plus the data-pipeline throughput
+bench (B9), prints the results, and writes two artifacts:
+
+  - benchmarks/results/koalja_bench.json — the full run (local detail)
+  - BENCH_koalja.json (repo top level)   — a compact per-bench summary of
+    the headline numbers, committed so the perf trajectory is tracked PR
+    over PR.
+
+The roofline tables are produced separately by
+`python -m repro.launch.dryrun --all` + `benchmarks.report` (they need the
+512-device env, which must not leak into this process).
 """
 
 from __future__ import annotations
@@ -36,12 +42,62 @@ def bench_pipeline_throughput():
     }
 
 
+# headline metric per bench for the committed trajectory file; a dotted
+# path selects a nested value from the bench's result dict
+_HEADLINES = {
+    "B1_metadata_overhead": ["1024KB.metadata_frac"],
+    "B2_cache_reuse": ["10_pushes.speedup"],
+    "B3_transport_avoidance": ["link_payload_ratio"],
+    "B4_notification_vs_polling": ["polls_until_arrival"],
+    "B5_policy_throughput": [
+        "merge.arrivals_per_s",
+        "scheduler_vs_polling.scan_reduction_x",
+        "scheduler_vs_polling.events_per_s",
+    ],
+    "B6_wireframe": ["cost_ratio"],
+    "B7_concurrent_fanout": [
+        "speedup",
+        "sustainability_identical",
+        "provenance_events_identical",
+        "merge_fcfs_identical",
+    ],
+    "B8_repeated_push": ["execution_reduction_x", "bytes_not_moved"],
+    "B9_pipeline_throughput": ["batches_per_s", "tokens_per_s"],
+}
+
+
+def _dig(result, dotted):
+    cur = result
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def summarize(results: dict) -> dict:
+    """Compact {bench: {metric: value}} view for BENCH_koalja.json."""
+    summary = {}
+    for name, entry in results.items():
+        if "error" in entry:
+            summary[name] = {"error": entry["error"]}
+            continue
+        picks = {}
+        for dotted in _HEADLINES.get(name, []):
+            val = _dig(entry.get("result") or {}, dotted)
+            if val is not None:
+                picks[dotted] = val
+        picks["bench_wall_s"] = round(entry.get("bench_wall_s", 0.0), 3)
+        summary[name] = picks
+    return summary
+
+
 def main():
     from benchmarks.bench_koalja import ALL
 
     results = {}
     benches = dict(ALL)
-    benches["B7_pipeline_throughput"] = bench_pipeline_throughput
+    benches["B9_pipeline_throughput"] = bench_pipeline_throughput
     for name, fn in benches.items():
         t0 = time.perf_counter()
         try:
@@ -60,6 +116,14 @@ def main():
     with open(path, "w") as f:
         json.dump(results, f, indent=2, default=str)
     print(f"\nwrote {path}")
+
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    traj_path = os.path.join(repo_root, "BENCH_koalja.json")
+    with open(traj_path, "w") as f:
+        json.dump(summarize(results), f, indent=2, default=str, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {traj_path}")
+
     failures = [n for n, r in results.items() if "error" in r]
     if failures:
         print("FAILED:", failures)

@@ -30,6 +30,7 @@ depending on the risk of recomputation" (§III.F Principle 2 discussion).
 from __future__ import annotations
 
 import hashlib
+import threading
 import time
 from typing import Any, Optional
 
@@ -88,67 +89,77 @@ class MemoCache:
         self.evictions = 0
         self.executions_avoided = 0
         self.bytes_saved = 0
+        # Concurrent waves consult the memo table from worker threads.
+        self._lock = threading.RLock()
 
     def lookup(self, key: str) -> Optional[Any]:
-        rec = self._entries.get(key)
-        if rec is None:
-            self.misses += 1
-            return None
-        value, expiry = rec
-        if expiry is not None and time.time() > expiry:
-            del self._entries[key]
-            self.evictions += 1
-            self.misses += 1
-            return None
-        self.hits += 1
-        return value
+        with self._lock:
+            rec = self._entries.get(key)
+            if rec is None:
+                self.misses += 1
+                return None
+            value, expiry = rec
+            if expiry is not None and time.time() > expiry:
+                del self._entries[key]
+                self.evictions += 1
+                self.misses += 1
+                return None
+            self.hits += 1
+            return value
 
     def insert(self, key: str, value: Any, ttl_s: Optional[float] = None) -> None:
         ttl = ttl_s if ttl_s is not None else self.default_ttl_s
         expiry = (time.time() + ttl) if ttl is not None else None
-        self._entries[key] = (value, expiry)
+        with self._lock:
+            self._entries[key] = (value, expiry)
 
     def credit_hit(self, record: Any) -> int:
         """Account one short-circuited execution; returns bytes saved."""
-        self.executions_avoided += 1
         saved = 0
         if isinstance(record, dict):
             saved = sum(int(n) for n in record.get("out_nbytes", {}).values())
-        self.bytes_saved += saved
+        with self._lock:
+            self.executions_avoided += 1
+            self.bytes_saved += saved
         return saved
 
     def invalidate_version(self, software_version_prefix: str) -> int:
         """Purge entries produced by a given software version (forensic
         recall: 'a change may be due to software errors, indicating that
         recomputation is needed')."""
-        doomed = [
-            k
-            for k, (v, _) in self._entries.items()
-            if isinstance(v, dict)
-            and v.get("software_version", "").startswith(software_version_prefix)
-        ]
-        for k in doomed:
-            del self._entries[k]
-            self.evictions += 1
-        return len(doomed)
+        with self._lock:
+            doomed = [
+                k
+                for k, (v, _) in self._entries.items()
+                if isinstance(v, dict)
+                and v.get("software_version", "").startswith(software_version_prefix)
+            ]
+            for k in doomed:
+                del self._entries[k]
+                self.evictions += 1
+            return len(doomed)
 
     def purge_expired(self) -> int:
         now = time.time()
-        doomed = [k for k, (_, e) in self._entries.items() if e is not None and now > e]
-        for k in doomed:
-            del self._entries[k]
-            self.evictions += 1
-        return len(doomed)
+        with self._lock:
+            doomed = [
+                k for k, (_, e) in self._entries.items() if e is not None and now > e
+            ]
+            for k in doomed:
+                del self._entries[k]
+                self.evictions += 1
+            return len(doomed)
 
     def stats(self) -> dict:
-        return {
-            "entries": len(self._entries),
-            "hits": self.hits,
-            "misses": self.misses,
-            "evictions": self.evictions,
-            "executions_avoided": self.executions_avoided,
-            "bytes_saved": self.bytes_saved,
-        }
+        with self._lock:
+            return {
+                "entries": len(self._entries),
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "executions_avoided": self.executions_avoided,
+                "bytes_saved": self.bytes_saved,
+            }
 
 
 # Seed-era name; kept so `from repro.core import ContentCache` stays valid.

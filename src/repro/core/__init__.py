@@ -10,10 +10,11 @@ from repro.cache import ContentCache, MemoCache, snapshot_key
 
 from .av import AnnotatedValue, Stamp, content_hash, is_ghost
 from .evalloop import EvalLoop, build_eval_circuit
-from .link import RegionFenceError, SmartLink
+from .link import LinkBackpressureError, RegionFenceError, SmartLink
 from .pipeline import Pipeline, PipelineManager
 from .policy import InputSpec, SnapshotPolicy
 from .provenance import ProvenanceRegistry
+from .scheduler import Scheduler, SerialWaveRunner
 from .store import ArtifactStore
 from .task import ServiceCall, SmartTask, software_version_of
 from .wireframe import GhostValue, ghost_run
@@ -23,10 +24,11 @@ __all__ = [
     "AnnotatedValue", "Stamp", "content_hash", "is_ghost",
     "ContentCache", "MemoCache", "snapshot_key",
     "EvalLoop", "build_eval_circuit",
-    "RegionFenceError", "SmartLink",
+    "LinkBackpressureError", "RegionFenceError", "SmartLink",
     "Pipeline", "PipelineManager",
     "InputSpec", "SnapshotPolicy",
     "ProvenanceRegistry", "ArtifactStore",
+    "Scheduler", "SerialWaveRunner",
     "ServiceCall", "SmartTask", "software_version_of",
     "GhostValue", "ghost_run", "build_wiring", "parse_wiring",
 ]

@@ -7,11 +7,18 @@ that they are not orthogonal):
   - **reactive** (push): events arriving at the input end drive computation
     downstream — ``push()`` / ``sample()`` then ``propagate()``.
   - **make** (pull): a request for a target output triggers a hierarchical
-    rebuild of dependencies backwards, recursively — ``pull()`` — with
-    content-addressed cache hits standing in for up-to-date build artifacts.
+    rebuild of dependencies backwards — ``pull()`` — with content-addressed
+    cache hits standing in for up-to-date build artifacts.
 
-Cycles are allowed (DCG, not DAG): propagation is round-limited and
-rate-controlled rather than topology-restricted.
+Both modes are thin wrappers over the event-driven
+:class:`~repro.core.scheduler.Scheduler`: link notifications enqueue exactly
+the tasks whose policies may have become ready, and waves of simultaneously
+ready tasks execute through the pluggable ``run_wave`` seam (serial inline,
+or concurrent via :class:`~repro.workspace.executors.ConcurrentExecutor`).
+There is no full-graph polling anywhere on the hot path.
+
+Cycles are allowed (DCG, not DAG): each task gets a per-drain *fire budget*
+(the ``max_rounds`` knob) rather than a topology restriction.
 """
 
 from __future__ import annotations
@@ -24,6 +31,7 @@ from repro.cache import MemoCache
 from .av import AnnotatedValue, content_hash, is_ghost
 from .link import SmartLink
 from .provenance import ProvenanceRegistry
+from .scheduler import Scheduler, SerialWaveRunner
 from .store import ArtifactStore
 from .task import SmartTask
 
@@ -117,13 +125,20 @@ class PipelineManager:
         registry: Optional[ProvenanceRegistry] = None,
         cache: Optional[MemoCache] = None,
         max_rounds: int = 100,
+        executor: Any = None,
     ) -> None:
         self.pipeline = pipeline
         self.store = store or ArtifactStore()
         self.registry = registry or ProvenanceRegistry()
         # cache=None -> default MemoCache; cache=False -> caching disabled
         self.cache = MemoCache() if cache is None else (cache or None)
+        # max_rounds survives as the per-task fire budget per drain (cycle
+        # rate control); it no longer multiplies full-graph scans.
         self.max_rounds = max_rounds
+        # anything exposing run_wave(manager, tasks) -> [(name, out_avs)];
+        # Workspace passes its executor backend here.
+        self.executor = executor if executor is not None else SerialWaveRunner()
+        self.scheduler = Scheduler(self, fire_budget=max_rounds)
         self._register_design()
 
     def _register_design(self) -> None:
@@ -162,6 +177,9 @@ class PipelineManager:
         t = self.pipeline.tasks[task]
         av.stamp(t.name, "consumed", t.version, region=t.region)
         t.policy.arrive(input_name, av)
+        # Edge arrivals bypass links, so there is no notification to ride:
+        # tell the scheduler directly that this task may have become ready.
+        self.scheduler.mark_dirty(t.name)
         return av
 
     def _emit_external(self, task: str, output: str, payload: Any, region: str = "local"):
@@ -227,20 +245,10 @@ class PipelineManager:
         return fired
 
     def propagate(self) -> dict:
-        """Run reactive rounds until quiescent (or round limit on cycles)."""
-        fired: dict = {}
-        for _ in range(self.max_rounds):
-            any_fired = False
-            for t in self.pipeline.tasks.values():
-                t.ingest()
-                while t.ready():
-                    out = t.execute(self.store, self.registry, self.cache)
-                    fired.setdefault(t.name, []).append(out)
-                    any_fired = True
-                    t.ingest()
-            if not any_fired:
-                break
-        return fired
+        """Drain the ready queue until quiescent (event-driven; no
+        full-graph polling — see :class:`~repro.core.scheduler.Scheduler`).
+        Cycles are bounded by the per-task fire budget (``max_rounds``)."""
+        return self.scheduler.drain()
 
     # -- make (pull) mode -----------------------------------------------------------
     def pull(self, target: str, _visiting: Optional[set] = None) -> dict:
@@ -249,25 +257,16 @@ class PipelineManager:
 
     def _pull(self, target: str, _visiting: Optional[set] = None) -> dict:
         """Request the target task's outputs, rebuilding dependencies
-        backwards recursively. Unchanged subtrees resolve as cache hits."""
-        _visiting = _visiting if _visiting is not None else set()
-        if target in _visiting:  # cycle guard: reuse last outputs
+        backwards (iterative dependency-cone walk on the scheduler; the old
+        recursion's cycle guard becomes a skipped back-edge). Unchanged
+        subtrees resolve as cache hits or prior outputs.
+
+        ``_visiting`` is accepted for signature compatibility with the seed
+        recursion; the scheduler tracks the cone itself.
+        """
+        if _visiting and target in _visiting:  # legacy re-entry: old guard
             return self.pipeline.tasks[target].last_outputs
-        _visiting.add(target)
-        t = self.pipeline.tasks[target]
-        for link in t.in_links.values():
-            self._pull(link.src_task, _visiting)
-        t.ingest()
-        if t.ready():
-            return t.execute(self.store, self.registry, self.cache)
-        if t.source and not t.input_specs:
-            return t.execute(self.store, self.registry, self.cache)
-        if t.last_outputs:
-            return t.last_outputs
-        raise RuntimeError(
-            f"pull({target}): dependencies produced no data and no prior "
-            f"outputs exist (pending={t.policy.stats()['pending']})"
-        )
+        return self.scheduler.pull(target)
 
     # -- convenience -------------------------------------------------------------
     def value_of(self, av: AnnotatedValue) -> Any:
@@ -297,8 +296,8 @@ class PipelineManager:
                 n: {"executions": t.executions, "cache_hits": t.cache_hits}
                 for n, t in self.pipeline.tasks.items()
             },
-            "links": {
-                l.name: {"carried": l.avs_carried, "notified": l.notifications_sent}
-                for l in self.pipeline.links
-            },
+            "links": {l.name: l.stats() for l in self.pipeline.links},
+            # trigger-work scorecard: enqueued (event-driven) vs the
+            # polling-scan equivalent the seed engine would have burned
+            "scheduler": self.scheduler.stats(),
         }

@@ -21,6 +21,7 @@ snapshot (e.g. moving averages). Rate control bounds trigger frequency
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
 from typing import Any, Optional
@@ -122,17 +123,26 @@ class SnapshotPolicy:
         self._arrival_seq = 0  # global arrival counter (merge FCFS ordering)
         self.snapshots_formed = 0
         self.rate_suppressions = 0
+        # Arrivals land from the scheduler thread while snapshot() may run
+        # in an executor worker; an RLock keeps buffer/seq accounting
+        # coherent (snapshot() re-enters ready()).
+        self._lock = threading.RLock()
 
     # -- arrivals -------------------------------------------------------------
     def arrive(self, input_name: str, value: Any) -> None:
-        self.buffers[input_name].push(value, seq=self._arrival_seq)
-        self._arrival_seq += 1
+        with self._lock:
+            self.buffers[input_name].push(value, seq=self._arrival_seq)
+            self._arrival_seq += 1
 
     # -- readiness ------------------------------------------------------------
     def _rate_ok(self) -> bool:
         return (time.time() - self._last_fire) >= self.min_interval_s
 
     def ready(self) -> bool:
+        with self._lock:
+            return self._ready_locked()
+
+    def _ready_locked(self) -> bool:
         if not self.buffers:
             # Source tasks have no inputs; they fire only when explicitly
             # sampled or pulled, never spontaneously in reactive rounds.
@@ -171,12 +181,16 @@ class SnapshotPolicy:
     # -- snapshot formation -----------------------------------------------------
     def snapshot(self) -> dict:
         """Form one execution set. Caller must have checked ready()."""
+        with self._lock:
+            return self._snapshot_locked()
+
+    def _snapshot_locked(self) -> dict:
         if not self.buffers:
             # Source task: explicit sample()/pull() fires it with an empty set.
             self._last_fire = time.time()
             self.snapshots_formed += 1
             return {}
-        if not self.ready():
+        if not self._ready_locked():
             raise RuntimeError("snapshot() called when not ready")
         self._last_fire = time.time()
         self.snapshots_formed += 1
@@ -219,9 +233,10 @@ class SnapshotPolicy:
         return [v for _, v in tagged]
 
     def stats(self) -> dict:
-        return {
-            "mode": self.mode,
-            "snapshots_formed": self.snapshots_formed,
-            "rate_suppressions": self.rate_suppressions,
-            "pending": {n: b.fresh_count() for n, b in self.buffers.items()},
-        }
+        with self._lock:
+            return {
+                "mode": self.mode,
+                "snapshots_formed": self.snapshots_formed,
+                "rate_suppressions": self.rate_suppressions,
+                "pending": {n: b.fresh_count() for n, b in self.buffers.items()},
+            }

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import threading
 import time
 from collections import defaultdict
 from typing import Any, Iterable, Optional
@@ -48,11 +49,15 @@ class ProvenanceRegistry:
         self._task_promises: dict = {}  # task -> {inputs, outputs, version}
         self._lineage: dict = {}  # av uid -> list of parent av uids
         self.anomalies: list = []
+        # ConcurrentExecutor workers register AVs and log visits from
+        # multiple threads; an RLock keeps the stories coherent.
+        self._lock = threading.RLock()
 
     # -- registration --------------------------------------------------------
     def register_av(self, av: AnnotatedValue, parents: Iterable[str] = ()) -> None:
-        self._avs[av.uid] = av
-        self._lineage[av.uid] = list(parents)
+        with self._lock:
+            self._avs[av.uid] = av
+            self._lineage[av.uid] = list(parents)
 
     def log_visit(
         self,
@@ -62,32 +67,37 @@ class ProvenanceRegistry:
         software_version: str,
         note: str = "",
     ) -> None:
-        self._visitor_logs[task].append(
-            VisitorEntry(
-                task=task,
-                av_uid=av_uid,
-                event=event,
-                timestamp=time.time(),
-                software_version=software_version,
-                note=note,
-            )
+        entry = VisitorEntry(
+            task=task,
+            av_uid=av_uid,
+            event=event,
+            timestamp=time.time(),
+            software_version=software_version,
+            note=note,
         )
+        with self._lock:
+            self._visitor_logs[task].append(entry)
 
     def register_task(
         self, task: str, inputs: list, outputs: list, version: str
     ) -> None:
-        self._task_promises[task] = {
-            "inputs": list(inputs),
-            "outputs": list(outputs),
-            "version": version,
-        }
+        with self._lock:
+            self._task_promises[task] = {
+                "inputs": list(inputs),
+                "outputs": list(outputs),
+                "version": version,
+            }
 
     def add_design_edge(self, src: str, relation: str, dst: str) -> None:
-        self._design_edges.add((src, relation, dst))
+        with self._lock:
+            self._design_edges.add((src, relation, dst))
 
     def record_anomaly(self, task: str, note: str) -> None:
-        self.anomalies.append({"task": task, "note": note, "timestamp": time.time()})
-        self.log_visit(task, "-", "anomaly", self.task_version(task), note)
+        with self._lock:
+            self.anomalies.append(
+                {"task": task, "note": note, "timestamp": time.time()}
+            )
+            self.log_visit(task, "-", "anomaly", self.task_version(task), note)
 
     def task_version(self, task: str) -> str:
         return self._task_promises.get(task, {}).get("version", "?")
@@ -131,15 +141,17 @@ class ProvenanceRegistry:
 
     # -- story 2: checkpoint visitor log --------------------------------------
     def visitor_log(self, task: str) -> list:
-        return [e.to_record() for e in self._visitor_logs[task]]
+        with self._lock:
+            return [e.to_record() for e in self._visitor_logs[task]]
 
     def visits_of(self, av_uid: str) -> list:
         """All checkpoints an AV passed through (cross-task query)."""
         out = []
-        for task, entries in self._visitor_logs.items():
-            for e in entries:
-                if e.av_uid == av_uid:
-                    out.append(e.to_record())
+        with self._lock:
+            for task, entries in self._visitor_logs.items():
+                for e in entries:
+                    if e.av_uid == av_uid:
+                        out.append(e.to_record())
         return sorted(out, key=lambda r: r["timestamp"])
 
     # -- story 3: design map ---------------------------------------------------

@@ -125,6 +125,8 @@ class SmartTask:
         store: ArtifactStore,
         registry: ProvenanceRegistry,
         cache: Optional[MemoCache] = None,
+        *,
+        emit: bool = True,
     ) -> dict:
         """Form a snapshot, consult the memo cache, run user code if needed,
         and emit output AVs onto outgoing links. Returns {output_name: AV}.
@@ -132,6 +134,11 @@ class SmartTask:
         Payloads are fetched lazily: links carried only ``(uri, chash)``
         references, and bytes move just before user code runs — a memo hit
         (or a ghost run) therefore moves nothing at all.
+
+        ``emit=False`` defers the ``_emit`` step to the caller: the event
+        scheduler runs a wave's user code concurrently but emits serially in
+        wave order, so downstream arrival seqs (merge FCFS) stay
+        deterministic regardless of which worker finished first.
         """
         snap = self.policy.snapshot()
         in_hashes, parent_uids = {}, []
@@ -201,7 +208,8 @@ class SmartTask:
                         note=f"memo_of={orig_uid}" if orig_uid else "",
                     )
                     out_avs[oname] = av
-                self._emit(out_avs)
+                if emit:
+                    self._emit(out_avs)
                 return out_avs
 
         # materialize payloads (Principle 2: pin near the dependent) — this
@@ -264,7 +272,8 @@ class SmartTask:
                 make_record(self.version, outputs_rec, out_uids, out_nbytes),
                 ttl_s=self.cache_ttl_s,
             )
-        self._emit(out_avs)
+        if emit:
+            self._emit(out_avs)
         return out_avs
 
     @staticmethod

@@ -14,7 +14,13 @@ ghost / provenance queries) and :mod:`repro.workspace.executors` for the
 backend protocol (InlineExecutor, MeshExecutor).
 """
 
-from .executors import Executor, InlineExecutor, MeshExecutor
+from .executors import (
+    ConcurrentExecutor,
+    Executor,
+    InlineExecutor,
+    MeshExecutor,
+    default_executor,
+)
 from .handles import Port, TaskHandle, Wire, WiringError
 from .workspace import (
     RunResult,
@@ -26,7 +32,8 @@ from .workspace import (
 )
 
 __all__ = [
-    "Executor", "InlineExecutor", "MeshExecutor",
+    "ConcurrentExecutor", "Executor", "InlineExecutor", "MeshExecutor",
+    "default_executor",
     "Port", "TaskHandle", "Wire", "WiringError",
     "RunResult", "TaskResult", "Watcher", "Workspace",
     "WorkspaceFrozenError", "service",

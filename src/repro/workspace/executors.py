@@ -3,21 +3,32 @@
 The executor protocol is the underlay-transparency seam from the paper: the
 breadboard (Workspace) and the trigger semantics (push/pull/sample) are
 fixed; *where* task code executes is a backend choice. ``InlineExecutor``
-runs everything in-process (the paper's single-node breadboard).
-``MeshExecutor`` binds the same circuit to a JAX device mesh: logical-axis
-sharding rules are installed around every task execution, and model-step
-tasks can be compiled through :mod:`repro.dist` (the Kubernetes-underlay
-story mapped onto meshes).
+runs everything in-process (the paper's single-node breadboard);
+``ConcurrentExecutor`` fans a wave of simultaneously-ready tasks across a
+thread pool. ``MeshExecutor`` binds the same circuit to a JAX device mesh:
+logical-axis sharding rules are installed around every engine call, and
+model-step tasks can be compiled through :mod:`repro.dist` (the
+Kubernetes-underlay story mapped onto meshes); it composes with either wave
+backend via ``inner=``.
+
+The scheduling seam is ``run_wave(manager, tasks)``: the event scheduler
+(:mod:`repro.core.scheduler`) computes *waves* of ready tasks and hands each
+wave here. Backends run the user code however they like, but emission is
+always serialized by the scheduler in wave order, so provenance and
+merge-FCFS snapshots are identical across backends.
 """
 
 from __future__ import annotations
 
+import os
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Optional, Protocol, runtime_checkable
 
 
 @runtime_checkable
 class Executor(Protocol):
-    """Minimal backend contract: drive one PipelineManager engine call."""
+    """Minimal backend contract: drive one PipelineManager engine call and
+    execute scheduler waves."""
 
     def push(self, manager, task: str, payloads: dict, region: str) -> dict: ...
 
@@ -26,6 +37,8 @@ class Executor(Protocol):
     def sample(self, manager, source: str) -> dict: ...
 
     def inject(self, manager, task: str, input_name: str, payload: Any, region: str): ...
+
+    def run_wave(self, manager, tasks: list) -> list: ...
 
     def stats(self) -> dict: ...
 
@@ -42,6 +55,7 @@ class InlineExecutor:
         self.pulls = 0
         self.samples = 0
         self.injects = 0
+        self.waves_run = 0
 
     def push(self, manager, task: str, payloads: dict, region: str) -> dict:
         self.pushes += 1
@@ -59,6 +73,15 @@ class InlineExecutor:
         self.injects += 1
         return manager._inject(task, input_name, payload, region=region)
 
+    def run_wave(self, manager, tasks: list) -> list:
+        """Execute one scheduler wave serially (today's semantics, minus the
+        full-graph scans). Emission is deferred to the scheduler."""
+        self.waves_run += 1
+        return [
+            (t.name, t.execute(manager.store, manager.registry, manager.cache, emit=False))
+            for t in tasks
+        ]
+
     def stats(self) -> dict:
         return {
             "backend": type(self).__name__,
@@ -66,10 +89,104 @@ class InlineExecutor:
             "pulls": self.pulls,
             "samples": self.samples,
             "injects": self.injects,
+            "waves_run": self.waves_run,
         }
 
     def __repr__(self) -> str:
         return "InlineExecutor()"
+
+
+class ConcurrentExecutor(InlineExecutor):
+    """Execute independent tasks of a wave in parallel on a thread pool.
+
+    The tasks of one wave are, by construction, independent (each consumes
+    its own already-formed snapshot), so user code runs concurrently; the
+    scheduler then emits outputs serially in wave order, which keeps
+    downstream arrival seqs — and with them merge-FCFS determinism and the
+    provenance stories — bit-identical to :class:`InlineExecutor`.
+
+    Thread-compatibility contract for plugin code: tasks in one wave may run
+    on different threads, so user fns should not share unguarded mutable
+    state across *tasks* (state inside one task is safe — a task is never in
+    two waves at once). Registry, memo cache, store, and policies are all
+    lock-protected.
+    """
+
+    def __init__(self, max_workers: int = 8) -> None:
+        super().__init__()
+        if max_workers < 1:
+            raise ValueError(f"max_workers must be >= 1, got {max_workers}")
+        self.max_workers = max_workers
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self.parallel_waves = 0
+        self.tasks_parallel = 0
+
+    def _ensure_pool(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.max_workers, thread_name_prefix="koalja-wave"
+            )
+        return self._pool
+
+    def run_wave(self, manager, tasks: list) -> list:
+        if len(tasks) <= 1:
+            # single-task waves (and pull-mode nodes) stay on the calling
+            # thread: no pool hop, and context managers installed by outer
+            # backends (e.g. MeshExecutor's axis rules) remain visible.
+            return super().run_wave(manager, tasks)
+        self.waves_run += 1
+        self.parallel_waves += 1
+        self.tasks_parallel += len(tasks)
+        pool = self._ensure_pool()
+        futures = [
+            pool.submit(
+                t.execute, manager.store, manager.registry, manager.cache, emit=False
+            )
+            for t in tasks
+        ]
+        # zip back in wave order — not completion order — so the caller's
+        # serialized emission is deterministic.
+        return [(t.name, f.result()) for t, f in zip(tasks, futures)]
+
+    def shutdown(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def __del__(self) -> None:
+        # workspaces are created freely (tests, short-lived circuits); drop
+        # the worker threads with the executor instead of leaking them
+        try:
+            if self._pool is not None:
+                self._pool.shutdown(wait=False)
+                self._pool = None
+        except Exception:
+            pass
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out["max_workers"] = self.max_workers
+        out["parallel_waves"] = self.parallel_waves
+        out["tasks_parallel"] = self.tasks_parallel
+        return out
+
+    def __repr__(self) -> str:
+        return f"ConcurrentExecutor(max_workers={self.max_workers})"
+
+
+def default_executor() -> InlineExecutor:
+    """Backend selected by the ``KOALJA_EXECUTOR`` env var (``inline`` |
+    ``concurrent``); ``KOALJA_MAX_WORKERS`` sizes the pool. Lets CI smoke
+    the threaded path across the whole suite without code changes."""
+    name = os.environ.get("KOALJA_EXECUTOR", "inline").strip().lower()
+    if name in ("concurrent", "threads", "threadpool"):
+        workers = int(os.environ.get("KOALJA_MAX_WORKERS", "8"))
+        return ConcurrentExecutor(max_workers=workers)
+    if name in ("", "inline"):
+        return InlineExecutor()
+    raise ValueError(
+        f"KOALJA_EXECUTOR={name!r} is not a known backend (inline | concurrent)"
+    )
 
 
 class MeshExecutor(InlineExecutor):
@@ -80,6 +197,13 @@ class MeshExecutor(InlineExecutor):
     tasks get their jitted sharded implementations from the dist layer
     (``train_step`` / ``serve_fns``). The circuit, its provenance, and the
     trigger modes are untouched — only the substrate changes.
+
+    Wave execution composes with either in-process backend: the default is
+    serial (inherited), and ``inner=ConcurrentExecutor(...)`` fans waves
+    across threads. Note the axis-rules context is installed on the engine
+    thread; with a concurrent inner backend, multi-task waves run on pool
+    threads *outside* that context (single-task waves and pull-mode nodes
+    stay on the engine thread and keep it).
     """
 
     def __init__(
@@ -90,6 +214,7 @@ class MeshExecutor(InlineExecutor):
         cfg=None,
         mode: str = "train",
         global_batch: Optional[int] = None,
+        inner: Optional[InlineExecutor] = None,
     ) -> None:
         super().__init__()
         if mesh is None:
@@ -104,6 +229,7 @@ class MeshExecutor(InlineExecutor):
         self.rules = rules
         self.mode = mode
         self.global_batch = global_batch
+        self.inner = inner
 
     def _ctx(self):
         from contextlib import nullcontext
@@ -123,6 +249,11 @@ class MeshExecutor(InlineExecutor):
     def sample(self, manager, source: str) -> dict:
         with self._ctx():
             return super().sample(manager, source)
+
+    def run_wave(self, manager, tasks: list) -> list:
+        if self.inner is not None:
+            return self.inner.run_wave(manager, tasks)
+        return super().run_wave(manager, tasks)
 
     # -- dist-layer step builders (model tasks) -----------------------------
     def train_step(self, model, schedule, **kwargs):
@@ -147,8 +278,11 @@ class MeshExecutor(InlineExecutor):
         out = super().stats()
         out["mesh"] = dict(self.mesh.shape)
         out["mode"] = self.mode
+        if self.inner is not None:
+            out["inner"] = self.inner.stats()
         return out
 
     def __repr__(self) -> str:
         shape = dict(self.mesh.shape)
-        return f"MeshExecutor(mesh={shape}, mode={self.mode!r})"
+        inner = f", inner={self.inner!r}" if self.inner is not None else ""
+        return f"MeshExecutor(mesh={shape}, mode={self.mode!r}{inner})"

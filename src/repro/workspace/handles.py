@@ -77,8 +77,24 @@ class Wire:
         return self
 
     def notify_threshold(self, seconds: float) -> "Wire":
+        """Poll-mode fast path (§III.J): arrivals faster than this coalesce
+        instead of notifying per event (suppressions are counted in link
+        stats; the scheduler batch-polls them at quiescence)."""
         self._ws._assert_mutable()
         self.decl.link_kwargs["notify_threshold_s"] = seconds
+        return self
+
+    def capacity(
+        self, n: int, overflow: str = "block", block_timeout_s: Optional[float] = None
+    ) -> "Wire":
+        """Bound this wire's queue to n AVs with a backpressure policy:
+        ``block`` (wait for the consumer), ``drop_oldest`` (ring buffer),
+        or ``error`` (fail fast)."""
+        self._ws._assert_mutable()
+        self.decl.link_kwargs["capacity"] = n
+        self.decl.link_kwargs["overflow"] = overflow
+        if block_timeout_s is not None:
+            self.decl.link_kwargs["block_timeout_s"] = block_timeout_s
         return self
 
     def __repr__(self) -> str:

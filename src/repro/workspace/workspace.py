@@ -36,7 +36,7 @@ from repro.core.provenance import ProvenanceRegistry
 from repro.core.store import ArtifactStore
 from repro.core.task import ServiceCall, SmartTask
 
-from .executors import Executor, InlineExecutor
+from .executors import Executor, InlineExecutor, default_executor
 from .handles import Port, TaskDecl, TaskHandle, Wire, WireDecl, WiringError
 
 TaskRef = Union[str, TaskHandle, Port]
@@ -149,7 +149,9 @@ class Workspace:
         max_rounds: int = 100,
     ) -> None:
         self.name = name
-        self.executor = executor or InlineExecutor()
+        # executor=None defers to KOALJA_EXECUTOR (inline | concurrent) so
+        # whole suites can smoke the threaded scheduler path via env.
+        self.executor = executor or default_executor()
         self._store = store or ArtifactStore()
         self._registry = registry or ProvenanceRegistry()
         # cache=None -> default MemoCache; cache=False -> caching disabled
@@ -350,6 +352,8 @@ class Workspace:
             registry=self._registry,
             cache=self._cache,
             max_rounds=self._max_rounds,
+            # the scheduler hands waves of ready tasks to this backend
+            executor=self.executor,
         )
         return self._manager
 
@@ -508,7 +512,10 @@ class Workspace:
     def stats(self) -> dict:
         """Engine stats plus this workspace's executor counters. The
         ``sustainability`` block is the paper's §III.F scorecard: executions
-        avoided by the memo layer and bytes the circuit never moved."""
+        avoided by the memo layer and bytes the circuit never moved. The
+        ``scheduler`` block is the trigger-work scorecard: waves, queue
+        depth high-water, and tasks-enqueued vs the polling-scan equivalent
+        the seed's round-robin engine would have burned."""
         out = self._build().stats()
         stats_fn = getattr(self.executor, "stats", None)
         out["executor"] = stats_fn() if stats_fn is not None else None

@@ -27,12 +27,22 @@ def test_docs_exist_and_are_linked_from_readme():
     readme = (REPO / "README.md").read_text()
     assert (REPO / "docs" / "ARCHITECTURE.md").exists()
     assert (REPO / "docs" / "provenance.md").exists()
+    assert (REPO / "docs" / "scheduler.md").exists()
     assert "docs/ARCHITECTURE.md" in readme
     assert "docs/provenance.md" in readme
+    assert "docs/scheduler.md" in readme
     assert "Caching & sustainability" in readme
+    assert "Scheduler & concurrency" in readme
 
 
 def test_provenance_walkthrough_executes():
     mod = _load_check_docs()
     n = mod.run_walkthrough()
     assert n >= 4, "walkthrough lost its code blocks"
+
+
+def test_scheduler_walkthrough_registered_and_executes():
+    mod = _load_check_docs()
+    assert "docs/scheduler.md" in mod.WALKTHROUGHS
+    n = mod.run_walkthrough("docs/scheduler.md")
+    assert n >= 5, "scheduler walkthrough lost its code blocks"

@@ -264,7 +264,17 @@ def test_executor_stats_surface():
     ws, _ = _two_stage()
     ws.push("a", x=np.arange(4.0))
     ex = ws.stats()["executor"]
-    assert ex["backend"] == "InlineExecutor"
+    # the default backend is env-selected (KOALJA_EXECUTOR): assert the
+    # selection contract, not just self-reporting
+    import os
+
+    env = os.environ.get("KOALJA_EXECUTOR", "inline").strip().lower()
+    expected = (
+        "ConcurrentExecutor"
+        if env in ("concurrent", "threads", "threadpool")
+        else "InlineExecutor"
+    )
+    assert ex["backend"] == expected
     assert ex["pushes"] == 1
 
 

@@ -1,14 +1,14 @@
 #!/usr/bin/env python
-"""Docs gate: link-check the markdown suite and execute the provenance
-walkthrough, so the documentation cannot rot.
+"""Docs gate: link-check the markdown suite and execute the registered
+walkthroughs, so the documentation cannot rot.
 
 Two checks, both also exercised by ``tests/test_docs.py``:
 
 1. Every relative markdown link in ``README.md`` and ``docs/*.md`` must
    resolve to an existing file.
-2. Every ```python``` block in ``docs/provenance.md`` is executed, in
-   order, in one shared namespace — the walkthrough's asserts are the
-   contract between the docs and the engine.
+2. Every ```python``` block in each ``WALKTHROUGHS`` document is executed,
+   in order, in one shared namespace per document — the walkthroughs'
+   asserts are the contract between the docs and the engine.
 
 Usage: ``python tools/check_docs.py`` (exit code 0 = docs are healthy).
 """
@@ -20,6 +20,12 @@ import re
 import sys
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
+
+# Runnable documents: every ```python``` block in these executes in CI.
+WALKTHROUGHS = (
+    "docs/provenance.md",
+    "docs/scheduler.md",
+)
 
 # [text](target) — markdown links, excluding images handled identically
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
@@ -73,10 +79,14 @@ def main() -> int:
     problems = check_links()
     for p in problems:
         print(f"FAIL {p}")
-    n = run_walkthrough()
+    total = 0
+    for doc in WALKTHROUGHS:
+        n = run_walkthrough(doc)
+        print(f"  {doc}: {n} blocks executed")
+        total += n
     print(
         f"docs OK: {len(doc_files())} files link-checked, "
-        f"{n} walkthrough blocks executed"
+        f"{total} walkthrough blocks executed across {len(WALKTHROUGHS)} docs"
     )
     return 1 if problems else 0
 
