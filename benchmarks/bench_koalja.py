@@ -16,6 +16,11 @@ each bench pins one qualitative claim to a number).
   B8  repeated push            §III.F  semantic memoization short-circuits the
                                        hot path: unchanged inputs re-pushed N
                                        times execute ~once and move ~no bytes
+  B10 edge placement           §IV     data-gravity placement on an IoT fan-in
+                                       moves >=5x fewer cross-zone bytes than
+                                       naive all-to-cloud, with bit-identical
+                                       provenance and merge order across
+                                       Inline/Zoned executors
 """
 
 from __future__ import annotations
@@ -25,7 +30,13 @@ import time
 import numpy as np
 
 from repro.core import SnapshotPolicy
-from repro.workspace import ConcurrentExecutor, InlineExecutor, Workspace
+from repro.topology import Topology
+from repro.workspace import (
+    ConcurrentExecutor,
+    InlineExecutor,
+    Workspace,
+    ZonedExecutor,
+)
 
 
 def _mlp_workspace(heavy_ms: float = 0.0, cache=None) -> Workspace:
@@ -353,6 +364,112 @@ def bench_repeated_push(pushes: int = 10):
     }
 
 
+def _edge_fanin_workspace(placement, executor=None, zones=3, sensors=8):
+    """IoT-style fan-in (the paper's §IV edge story): `zones` edge sites,
+    each with `sensors` edge-pinned sources feeding one floating per-zone
+    aggregator; a cloud-pinned reducer merge-FCFSes the aggregates. Under
+    `pin` placement the floating aggregators land in the default (cloud)
+    zone and every raw reading crosses the edge->cloud link; under
+    `data_gravity` each aggregator is co-located with its zone's bytes and
+    only the (sensors-times-smaller) aggregates cross."""
+    topo = Topology("iot")
+    topo.zone("cloud", tier="cloud")
+    zone_names = [f"edge-{i}" for i in range(zones)]
+    for z in zone_names:
+        topo.zone(z, tier="edge")
+        topo.link("cloud", z, bandwidth_mbps=50, latency_ms=20, energy_j_per_mb=0.05)
+    ws = Workspace(
+        "edge-fanin", topology=topo, placement=placement,
+        executor=executor, cache=False,
+    )
+    for z in zone_names:
+        for i in range(sensors):
+            ws.source(
+                lambda: {"reading": np.zeros(4, np.float32)},
+                name=f"s_{z}_{i}", outputs=["reading"],
+            ).place(z)
+        agg = ws.task(
+            lambda **kw: {"agg": sum(kw.values())},
+            name=f"agg_{z}", inputs=[f"r{i}" for i in range(sensors)],
+            outputs=["agg"],
+        )
+        for i in range(sensors):
+            ws[f"s_{z}_{i}"]["reading"] >> agg[f"r{i}"]
+    red = ws.task(
+        lambda merged: {"total": [float(np.sum(m)) for m in merged]},
+        name="reduce", inputs=[f"a_{z}" for z in zone_names],
+        outputs=["total"], mode="merge",
+    ).place("cloud")
+    for z in zone_names:
+        ws[f"agg_{z}"]["agg"] >> red[f"a_{z}"]
+    return ws, zone_names
+
+
+def _drive_edge_fanin(ws, zone_names, rounds, n, sensors):
+    rng = np.random.RandomState(0)
+    for _ in range(rounds):
+        for z in zone_names:
+            for i in range(sensors):
+                ws.push(f"s_{z}_{i}", reading=rng.randn(n).astype(np.float32))
+    stats = ws.stats()
+    return {
+        "ledger": stats["topology"]["ledger"],
+        "merge_order": ws.value_of(ws.pipeline.tasks["reduce"].last_outputs["total"]),
+        "events": sorted(
+            (t, e["event"]) for t in ws.tasks() for e in ws.visitor_log(t)
+        ),
+        "zones": {
+            z: v["executions"] for z, v in stats["topology"]["zones"].items()
+        },
+    }
+
+
+def bench_edge_placement(zones=3, sensors=8, rounds=3, n=256):
+    """ISSUE 4 acceptance: on the IoT fan-in, data-gravity placement must
+    move >=5x fewer cross-zone bytes than naive all-to-cloud (`pin` with
+    floating aggregators), with identical results, provenance events, and
+    merge-FCFS order — including under ZonedExecutor(inner=Concurrent)."""
+    runs = {}
+    for label, placement, executor in (
+        ("all_to_cloud", "pin", None),
+        ("data_gravity", "data_gravity", None),
+        ("data_gravity_zoned", "data_gravity",
+         ZonedExecutor(inner=ConcurrentExecutor(max_workers=4))),
+    ):
+        ws, zone_names = _edge_fanin_workspace(placement, executor, zones, sensors)
+        runs[label] = _drive_edge_fanin(ws, zone_names, rounds, n, sensors)
+    pin_led = runs["all_to_cloud"]["ledger"]
+    grav_led = runs["data_gravity"]["ledger"]
+    return {
+        "zones": zones,
+        "sensors_per_zone": sensors,
+        "rounds": rounds,
+        "reading_bytes": n * 4,
+        "bytes_crosszone_all_to_cloud": pin_led["bytes_moved_crosszone"],
+        "bytes_crosszone_data_gravity": grav_led["bytes_moved_crosszone"],
+        "bytes_reduction_x": pin_led["bytes_moved_crosszone"]
+        / max(grav_led["bytes_moved_crosszone"], 1),
+        "energy_j_all_to_cloud": pin_led["transfer_energy_j"],
+        "energy_j_data_gravity": grav_led["transfer_energy_j"],
+        "merge_order_identical": (
+            runs["all_to_cloud"]["merge_order"]
+            == runs["data_gravity"]["merge_order"]
+            == runs["data_gravity_zoned"]["merge_order"]
+        ),
+        "provenance_events_identical": (
+            runs["all_to_cloud"]["events"]
+            == runs["data_gravity"]["events"]
+            == runs["data_gravity_zoned"]["events"]
+        ),
+        "zoned_ledger_identical": (
+            runs["data_gravity"]["ledger"] == runs["data_gravity_zoned"]["ledger"]
+        ),
+        "edge_executions_gravity": sum(
+            v for z, v in runs["data_gravity"]["zones"].items() if z != "cloud"
+        ),
+    }
+
+
 ALL = {
     "B1_metadata_overhead": bench_metadata_overhead,
     "B2_cache_reuse": bench_cache_reuse,
@@ -362,4 +479,5 @@ ALL = {
     "B6_wireframe": bench_wireframe,
     "B7_concurrent_fanout": bench_concurrent_fanout,
     "B8_repeated_push": bench_repeated_push,
+    "B10_edge_placement": bench_edge_placement,
 }

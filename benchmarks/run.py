@@ -63,6 +63,15 @@ _HEADLINES = {
     ],
     "B8_repeated_push": ["execution_reduction_x", "bytes_not_moved"],
     "B9_pipeline_throughput": ["batches_per_s", "tokens_per_s"],
+    "B10_edge_placement": [
+        "bytes_reduction_x",
+        "bytes_crosszone_all_to_cloud",
+        "bytes_crosszone_data_gravity",
+        "energy_j_data_gravity",
+        "merge_order_identical",
+        "provenance_events_identical",
+        "zoned_ledger_identical",
+    ],
 }
 
 

@@ -64,14 +64,19 @@ def make_record(
     outputs: dict,
     out_uids: Optional[dict] = None,
     out_nbytes: Optional[dict] = None,
+    birth_zone: Optional[str] = None,
 ) -> dict:
     """Build a memo record: {output_name: (uri, chash)} plus the forensic
-    back-pointers (original AV uids) and size accounting."""
+    back-pointers (original AV uids) and size accounting. ``birth_zone`` is
+    the extended-cloud zone the producing run executed in — a later memo
+    hit replays references to payloads still resident *there*, so the
+    transfer ledger must bill from the birth zone, not the replay zone."""
     return {
         "software_version": software_version,
         "outputs": dict(outputs),
         "out_uids": dict(out_uids or {}),
         "out_nbytes": dict(out_nbytes or {}),
+        "birth_zone": birth_zone,
         "produced_at": time.time(),
     }
 

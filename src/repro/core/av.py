@@ -163,6 +163,19 @@ class AnnotatedValue:
         )
 
     @property
+    def zone(self) -> Optional[str]:
+        """Extended-cloud zone this AV's payload was born in (repro.topology);
+        None outside a topology-bound circuit."""
+        return self.meta.get("zone")
+
+    @property
+    def payload_nbytes(self) -> Optional[int]:
+        """Declared payload size riding the AV (set at produce time under a
+        topology) — lets placement and ledgers price transfers from metadata
+        alone, never touching the payload."""
+        return self.meta.get("nbytes")
+
+    @property
     def journey(self) -> list:
         """The traveller log: ordered (task, event) pairs."""
         return [(s.task, s.event) for s in self.travel_document]

@@ -96,6 +96,12 @@ class SmartLink:
         self.avs_carried = 0
         self.avs_dropped = 0
         self.blocked_waits = 0
+        # Extended-cloud transport (repro.topology): AV references that
+        # crossed a zone boundary on this link. Counting refs — not bytes —
+        # is the point: cross-zone edges are hash-only ghost transfers, and
+        # payload bytes are charged separately (TransferLedger) only when a
+        # consumer materializes them.
+        self.crosszone_refs = 0
 
     # -- data channel ---------------------------------------------------------
     def offer(self, av: AnnotatedValue, software_version: str = "?") -> None:
@@ -194,6 +200,7 @@ class SmartLink:
             "dropped": self.avs_dropped,
             "blocked_waits": self.blocked_waits,
             "capacity": self.capacity,
+            "crosszone_refs": self.crosszone_refs,
         }
 
     def __repr__(self) -> str:

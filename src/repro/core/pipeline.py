@@ -91,6 +91,17 @@ class Pipeline:
             raise KeyError(f"{src} has no output {output!r}")
         if dst_input not in {s.name for s in dst_t.input_specs}:
             raise KeyError(f"{dst} has no input {dst_input!r}")
+        if dst_input in dst_t.in_links:
+            # One link per input: a second wire would silently shadow the
+            # first (its AVs would never be ingested, and the scheduler's
+            # quiescence sweep would spin on the undrainable queue forever).
+            # Fan-in is modelled as distinct inputs on a merge-mode task.
+            prior = dst_t.in_links[dst_input]
+            raise ValueError(
+                f"input {dst}.{dst_input} is already wired from "
+                f"{prior.src_task}.{prior.name.split('->')[0].split('.')[-1]}; "
+                f"declare one input per producer (merge mode FCFS-merges them)"
+            )
         link = SmartLink(
             name=f"{src}.{output}->{dst}.{dst_input}",
             src_task=src,
@@ -126,6 +137,8 @@ class PipelineManager:
         cache: Optional[MemoCache] = None,
         max_rounds: int = 100,
         executor: Any = None,
+        topology: Any = None,
+        placement: Any = None,
     ) -> None:
         self.pipeline = pipeline
         self.store = store or ArtifactStore()
@@ -138,6 +151,20 @@ class PipelineManager:
         # anything exposing run_wave(manager, tasks) -> [(name, out_avs)];
         # Workspace passes its executor backend here.
         self.executor = executor if executor is not None else SerialWaveRunner()
+        # Extended-cloud placement (repro.topology): a Topology binds every
+        # task to a zone, installs the transfer ledger, and gives the
+        # scheduler a placement policy to run at wave formation.
+        self.topology = topology
+        if topology is not None:
+            from repro.topology import TransferLedger, make_placement
+
+            self.ledger = TransferLedger(topology)
+            self.placement = make_placement(placement, topology)
+            for t in pipeline.tasks.values():
+                t.bind_topology(topology, self.ledger)
+        else:
+            self.ledger = None
+            self.placement = None
         self.scheduler = Scheduler(self, fire_budget=max_rounds)
         self._register_design()
 
@@ -161,20 +188,30 @@ class PipelineManager:
         """Edge-node sampling: wrap an external payload as an AV and deliver it
         to a task input ('data are intentionally sampled by the edge nodes').
         Ghost payloads (shape specs) ride the AV itself and never hit the
-        store — a wireframe run moves zero bytes end to end (§III.K)."""
+        store — a wireframe run moves zero bytes end to end (§III.K).
+        Under a topology the sample is born in the receiving task's zone —
+        edge sampling happens where the edge node lives."""
+        t = self.pipeline.tasks[task]
+        zone = t.zone if self.topology is not None else None
         if is_ghost(payload):
             chash = content_hash(payload)
+            meta = {"ghost": True, "ghost_spec": payload}
+            if zone is not None:
+                meta["zone"] = zone
             av = AnnotatedValue.produce(
                 chash, f"ghost://{chash}", f"edge:{input_name}", "edge",
-                region=region, meta={"ghost": True, "ghost_spec": payload},
+                region=region, meta=meta,
             )
         else:
             uri, chash = self.store.put(payload)
+            meta = None
+            if zone is not None:
+                meta = {"zone": zone, "nbytes": self.store.nbytes_of(chash)}
+                self.ledger.register_resident(chash, zone)
             av = AnnotatedValue.produce(
-                chash, uri, f"edge:{input_name}", "edge", region=region
+                chash, uri, f"edge:{input_name}", "edge", region=region, meta=meta
             )
         self.registry.register_av(av)
-        t = self.pipeline.tasks[task]
         av.stamp(t.name, "consumed", t.version, region=t.region)
         t.policy.arrive(input_name, av)
         # Edge arrivals bypass links, so there is no notification to ride:
@@ -195,8 +232,15 @@ class PipelineManager:
                 f"an input instead"
             )
         uri, chash = self.store.put(payload)
+        meta = {"external": True}
+        if self.topology is not None and t.zone is not None:
+            # the sensor saw it where the sensor lives: the payload is
+            # resident in the source task's zone at zero transport cost
+            meta["zone"] = t.zone
+            meta["nbytes"] = self.store.nbytes_of(chash)
+            self.ledger.register_resident(chash, t.zone)
         av = AnnotatedValue.produce(
-            chash, uri, t.name, t.version, region=region, meta={"external": True}
+            chash, uri, t.name, t.version, region=region, meta=meta
         )
         self.registry.register_av(av)
         self.registry.log_visit(t.name, av.uid, "emitted", t.version, note="external")
@@ -300,4 +344,32 @@ class PipelineManager:
             # trigger-work scorecard: enqueued (event-driven) vs the
             # polling-scan equivalent the seed engine would have burned
             "scheduler": self.scheduler.stats(),
+            # extended-cloud scorecard (repro.topology): where work ran and
+            # what transport the zone boundaries cost — None on flat circuits
+            "topology": self._topology_stats(),
+        }
+
+    def _topology_stats(self) -> Optional[dict]:
+        if self.topology is None:
+            return None
+        tasks = self.pipeline.tasks.values()
+        zones = {}
+        for zname in self.topology.zone_names():
+            residents = sorted(
+                t.name for t in tasks if (t.zone or self.topology.default_zone) == zname
+            )
+            zones[zname] = {
+                "tier": self.topology.tier_of(zname),
+                "tasks": residents,
+                "executions": sum(
+                    t.zone_executions.get(zname, 0) for t in tasks
+                ),
+            }
+        return {
+            "name": self.topology.name,
+            "default_zone": self.topology.default_zone,
+            "placement": self.placement.stats(),
+            "ledger": self.ledger.stats(),
+            "zones": zones,
+            "crosszone_refs": sum(l.crosszone_refs for l in self.pipeline.links),
         }

@@ -164,6 +164,12 @@ class Scheduler:
             self.waves += 1
             # A polling engine would have scanned every task this round.
             self.polling_scan_equivalent += n_tasks
+            # Extended-cloud placement happens here, on the scheduler thread,
+            # with the wave's snapshots already ingested: a data-gravity
+            # policy sees the exact pending input bytes per zone, and the
+            # assignment is deterministic across executor backends.
+            if mgr.placement is not None:
+                mgr.placement.place_wave(mgr, wave)
             results = self._runner().run_wave(mgr, wave)
             self.tasks_executed += len(results)
             # Emission is serialized in wave order: downstream arrival seqs
@@ -310,6 +316,8 @@ class Scheduler:
         return order
 
     def _execute_one(self, task: "SmartTask") -> dict:
+        if self.manager.placement is not None:
+            self.manager.placement.place_wave(self.manager, [task])
         [(_, out_avs)] = self._runner().run_wave(self.manager, [task])
         self._relieve_backpressure(task, self.manager.pipeline.tasks)
         task._emit(out_avs)

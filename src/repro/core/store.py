@@ -270,6 +270,13 @@ class ArtifactStore:
                 self.bytes_spilled += nbytes
             self.evictions_local += 1
 
+    def nbytes_of(self, chash: str) -> Optional[int]:
+        """Known size of a content hash (any hash ever put/seen), or None.
+        The transfer ledger and data-gravity placement price movement by
+        size without ever touching the payload itself."""
+        with self._lock:
+            return self._sizes.get(chash)
+
     def has(self, uri: str) -> bool:
         """Tier-strict residency check (is it in *that* tier right now)."""
         tier, h = uri.split("://", 1)

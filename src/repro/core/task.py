@@ -73,6 +73,7 @@ class SmartTask:
         cache_ttl_s: Optional[float] = None,
         services: Optional[dict] = None,
         source: bool = False,
+        zone: Optional[str] = None,
     ) -> None:
         self.name = name
         self.fn = fn
@@ -91,6 +92,18 @@ class SmartTask:
             for n, s in (services or {}).items()
         }
         self.source = source
+        # Extended-cloud placement (repro.topology): `pinned_zone` is the
+        # user's constraint (TaskHandle.place), `zone` the current
+        # assignment — rewritten per wave by the manager's PlacementPolicy.
+        self.pinned_zone = zone
+        self.zone: Optional[str] = None
+        self.topology = None
+        self.ledger = None
+        self.zone_executions: dict = {}
+        # (link, src_zone) of ingested AVs, judged against the *final* zone
+        # assignment at execute time (a task is in at most one wave at a
+        # time, so only its own execution thread touches this list)
+        self._pending_zone_refs: list = []
         self.executions = 0
         self.cache_hits = 0
         self.bytes_saved = 0  # output bytes this task's memo hits never remade
@@ -98,6 +111,21 @@ class SmartTask:
         self.in_links: dict = {}  # input name -> SmartLink
         self.out_links: dict = {}  # output name -> [SmartLink]
         self.last_outputs: dict = {}  # output name -> AnnotatedValue
+
+    # -- extended-cloud placement (repro.topology) ----------------------------
+    def bind_topology(self, topology, ledger) -> None:
+        """Attach this task to a Topology + TransferLedger (done once by the
+        PipelineManager). The initial zone is the pin or the topology
+        default; a data-gravity policy may re-place it every wave."""
+        if self.pinned_zone is not None and not topology.has_zone(self.pinned_zone):
+            raise ValueError(
+                f"task {self.name!r} pinned to unknown zone {self.pinned_zone!r} "
+                f"(topology {topology.name!r} has {topology.zone_names()})"
+            )
+        self.topology = topology
+        self.ledger = ledger
+        if self.zone is None:
+            self.zone = self.pinned_zone or topology.default_zone
 
     # -- arrival handling (called by the pipeline manager) ---------------------
     def ingest(self) -> int:
@@ -112,6 +140,15 @@ class SmartTask:
                 if av is None:
                     break
                 av.stamp(self.name, "consumed", self.version, region=self.region)
+                if self.ledger is not None:
+                    src_zone = av.meta.get("zone")
+                    if src_zone is not None:
+                        # Defer the crossed-a-zone-edge judgement: at ingest
+                        # this task's zone is the *previous* assignment, and
+                        # data_gravity may be about to move it to exactly
+                        # the zone these AVs came from. The pending list is
+                        # settled at execute time, after placement.
+                        self._pending_zone_refs.append((link, src_zone))
                 self.policy.arrive(spec.name, av)
                 n += 1
         return n
@@ -140,6 +177,16 @@ class SmartTask:
         wave order, so downstream arrival seqs (merge FCFS) stay
         deterministic regardless of which worker finished first.
         """
+        # Settle deferred zone-crossing counts now that placement has fixed
+        # this firing's zone: a ref "crossed" only if its birth zone differs
+        # from where consumption actually happens (hash-only ghost
+        # transfer; payload bytes are charged separately at _materialize).
+        if self.ledger is not None and self._pending_zone_refs:
+            pending, self._pending_zone_refs = self._pending_zone_refs, []
+            for link, src_zone in pending:
+                if self.zone is not None and src_zone != self.zone:
+                    link.crosszone_refs += 1
+
         snap = self.policy.snapshot()
         in_hashes, parent_uids = {}, []
         for name, val in snap.items():
@@ -191,12 +238,25 @@ class SmartTask:
                 if credit is not None:
                     credit(rec)
                 out_uids = rec.get("out_uids", {}) if isinstance(rec, dict) else {}
+                hit_nbytes = rec.get("out_nbytes", {}) if isinstance(rec, dict) else {}
+                hit_zone = rec.get("birth_zone") if isinstance(rec, dict) else None
                 out_avs = {}
                 for oname, (uri, chash) in rec["outputs"].items():
                     orig_uid = out_uids.get(oname)
                     meta = {"cache_hit": True}
                     if orig_uid:
                         meta["memo_of"] = orig_uid
+                    if self.zone is not None:
+                        # memo AVs carry the *birth* zone of the original
+                        # producing run: a hit replays references to bytes
+                        # still resident there, so downstream gravity and
+                        # the ledger must weigh/bill against that zone, not
+                        # wherever this replay happens to run. (Records
+                        # minted on flat circuits fall back to the replay
+                        # zone — there is no better information.)
+                        meta["zone"] = hit_zone or self.zone
+                        if oname in hit_nbytes:
+                            meta["nbytes"] = int(hit_nbytes[oname])
                     av = AnnotatedValue.produce(
                         chash, uri, self.name, self.version, region=self.region,
                         meta=meta,
@@ -227,6 +287,8 @@ class SmartTask:
         result = self.fn(**kwargs)
         dt = time.perf_counter() - t0
         self.executions += 1
+        if self.zone is not None:
+            self.zone_executions[self.zone] = self.zone_executions.get(self.zone, 0) + 1
         registry.log_visit(
             self.name, "-", "executed", self.version, note=f"wall={dt:.6f}s"
         )
@@ -251,37 +313,61 @@ class SmartTask:
                 # the metadata, and it rides on the AV itself (§III.K).
                 any_ghost = True
                 chash = content_hash(payload)
+                meta = {"ghost": True, "ghost_spec": payload}
+                if self.zone is not None:
+                    meta["zone"] = self.zone
                 av = AnnotatedValue.produce(
                     chash, f"ghost://{chash}", self.name, self.version,
-                    region=self.region, meta={"ghost": True, "ghost_spec": payload},
+                    region=self.region, meta=meta,
                 )
             else:
                 uri, chash = store.put(payload)
+                nbytes = store._nbytes(payload)
+                meta = None
+                if self.zone is not None:
+                    # birth certificate for the transfer ledger: outputs are
+                    # resident where the task ran, and their size rides the
+                    # AV so data-gravity placement can weigh them later.
+                    meta = {"zone": self.zone, "nbytes": nbytes}
+                    if self.ledger is not None:
+                        self.ledger.register_resident(chash, self.zone)
                 av = AnnotatedValue.produce(
-                    chash, uri, self.name, self.version, region=self.region
+                    chash, uri, self.name, self.version, region=self.region,
+                    meta=meta,
                 )
                 outputs_rec[oname] = (uri, chash)
                 out_uids[oname] = av.uid
-                out_nbytes[oname] = store._nbytes(payload)
+                out_nbytes[oname] = nbytes
             registry.register_av(av, parents=parent_uids)
             registry.log_visit(self.name, av.uid, "emitted", self.version)
             out_avs[oname] = av
         if cache is not None and not any_ghost:
             cache.insert(
                 key,
-                make_record(self.version, outputs_rec, out_uids, out_nbytes),
+                make_record(
+                    self.version, outputs_rec, out_uids, out_nbytes,
+                    birth_zone=self.zone,
+                ),
                 ttl_s=self.cache_ttl_s,
             )
         if emit:
             self._emit(out_avs)
         return out_avs
 
-    @staticmethod
-    def _materialize(store: ArtifactStore, av: AnnotatedValue) -> Any:
+    def _materialize(self, store: ArtifactStore, av: AnnotatedValue) -> Any:
         """Lazy payload fetch: ghosts resolve from AV metadata (zero bytes);
-        real artifacts are pinned near this consumer and read locally."""
+        real artifacts are pinned near this consumer and read locally.
+
+        Under a topology this is the *only* point where zone transport is
+        charged: the AV reference crossed for free, and the TransferLedger
+        bills the bytes (once per content hash per destination zone) when —
+        and only when — a consumer in another zone needs the payload."""
         if av.uri.startswith("ghost://"):
             return av.meta.get("ghost_spec")
+        if self.ledger is not None:
+            src_zone = av.meta.get("zone")
+            nbytes = av.meta.get("nbytes") or store.nbytes_of(av.chash) or 0
+            self.ledger.on_materialize(av.chash, int(nbytes), src_zone, self.zone)
         return store.get(store.pin_local(av.uri, region=av.region))
 
     def _emit(self, out_avs: dict) -> None:

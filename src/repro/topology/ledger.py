@@ -1,0 +1,108 @@
+"""Transfer ledger — the extended-cloud sustainability scorecard (§III.F).
+
+The circuit's transport rule under a topology is *data gravity in reverse*:
+AV references cross zone edges freely (hash-only ghost transfer — a few
+hundred bytes of metadata), and payload bytes move only when a consumer in
+another zone actually **materializes** them. This ledger is where that rule
+becomes auditable:
+
+  - ``register_resident(chash, zone)`` — a payload was *born* in a zone
+    (task output, edge injection): content is resident there at zero cost.
+  - ``on_materialize(chash, nbytes, src, dst)`` — a consumer in ``dst``
+    needed the bytes. Same zone, or already resident in ``dst``: nothing
+    moves (counted as a local handover / a cross-zone dedup credit). First
+    materialization in a new zone: the bytes cross, the (src, dst) pair is
+    charged, and the content becomes resident in ``dst`` too.
+
+Energy is *derived*, never accumulated: ``transfer_energy_j`` prices the
+per-pair byte totals with the topology's link costs at read time, so the
+number is identical no matter which executor ran the waves or in what order
+threads finished — the ledger is part of the determinism contract.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import TYPE_CHECKING, Optional
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .topology import Topology
+
+
+class TransferLedger:
+    """Byte/energy accounting for payload movement across a Topology."""
+
+    def __init__(self, topology: "Topology") -> None:
+        self.topology = topology
+        self._lock = threading.Lock()
+        self._resident: set = set()  # (chash, zone): content materialized there
+        self._pair_bytes: dict = {}  # (src_zone, dst_zone) -> bytes moved
+        self.bytes_moved_crosszone = 0
+        self.bytes_not_moved_crosszone = 0  # dedup: already resident in dst
+        self.crosszone_transfers = 0
+        self.local_handovers = 0  # same-zone materializations (free)
+
+    def register_resident(self, chash: str, zone: Optional[str]) -> None:
+        if zone is None:
+            return
+        with self._lock:
+            self._resident.add((chash, zone))
+
+    def on_materialize(
+        self,
+        chash: str,
+        nbytes: int,
+        src_zone: Optional[str],
+        dst_zone: Optional[str],
+    ) -> bool:
+        """Record one consumer materializing a payload. Returns True iff
+        bytes actually crossed a zone boundary (first arrival in dst)."""
+        if src_zone is None or dst_zone is None:
+            return False
+        with self._lock:
+            if src_zone == dst_zone:
+                self.local_handovers += 1
+                self._resident.add((chash, dst_zone))
+                return False
+            if (chash, dst_zone) in self._resident:
+                self.bytes_not_moved_crosszone += nbytes
+                return False
+            self._resident.add((chash, dst_zone))
+            pair = (src_zone, dst_zone)
+            self._pair_bytes[pair] = self._pair_bytes.get(pair, 0) + nbytes
+            self.bytes_moved_crosszone += nbytes
+            self.crosszone_transfers += 1
+            return True
+
+    @property
+    def transfer_energy_j(self) -> float:
+        """Energy priced from per-pair byte totals — order-independent, so
+        ledgers agree bit-for-bit across Inline/Concurrent/Zoned backends."""
+        with self._lock:
+            pairs = dict(self._pair_bytes)
+        return sum(
+            self.topology.transfer_energy_j(s, d, n) for (s, d), n in sorted(pairs.items())
+        )
+
+    def by_pair(self) -> dict:
+        with self._lock:
+            return {f"{s}->{d}": n for (s, d), n in sorted(self._pair_bytes.items())}
+
+    def stats(self) -> dict:
+        with self._lock:
+            pairs = {f"{s}->{d}": n for (s, d), n in sorted(self._pair_bytes.items())}
+            out = {
+                "bytes_moved_crosszone": self.bytes_moved_crosszone,
+                "bytes_not_moved_crosszone": self.bytes_not_moved_crosszone,
+                "crosszone_transfers": self.crosszone_transfers,
+                "local_handovers": self.local_handovers,
+                "by_pair": pairs,
+            }
+        out["transfer_energy_j"] = self.transfer_energy_j
+        return out
+
+    def __repr__(self) -> str:
+        return (
+            f"TransferLedger(crosszone={self.bytes_moved_crosszone}B, "
+            f"energy={self.transfer_energy_j:.4f}J)"
+        )

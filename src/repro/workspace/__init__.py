@@ -19,6 +19,7 @@ from .executors import (
     Executor,
     InlineExecutor,
     MeshExecutor,
+    ZonedExecutor,
     default_executor,
 )
 from .handles import Port, TaskHandle, Wire, WiringError
@@ -33,7 +34,7 @@ from .workspace import (
 
 __all__ = [
     "ConcurrentExecutor", "Executor", "InlineExecutor", "MeshExecutor",
-    "default_executor",
+    "ZonedExecutor", "default_executor",
     "Port", "TaskHandle", "Wire", "WiringError",
     "RunResult", "TaskResult", "Watcher", "Workspace",
     "WorkspaceFrozenError", "service",

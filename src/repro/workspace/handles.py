@@ -33,6 +33,7 @@ class TaskDecl:
     services: Optional[dict] = None
     min_interval_s: float = 0.0
     cache_ttl_s: Optional[float] = None
+    zone: Optional[str] = None  # extended-cloud pin (TaskHandle.place)
 
     def input_named(self, name: str) -> Optional[InputSpec]:
         for s in self.inputs:
@@ -184,6 +185,31 @@ class TaskHandle:
                 f"(inputs={list(self.inputs)})"
             )
         return Port(self, name, "in")
+
+    def place(self, zone: str) -> "TaskHandle":
+        """Pin this task to an extended-cloud zone (paper §IV). Pinned tasks
+        always execute there; under ``data_gravity`` placement only
+        *unpinned* tasks are pulled toward their input bytes. Requires the
+        workspace to carry a :class:`repro.topology.Topology`."""
+        self._ws._assert_mutable()
+        topo = getattr(self._ws, "_topology", None)
+        if topo is None:
+            raise WiringError(
+                f"cannot place task {self.name!r}: workspace {self._ws.name!r} "
+                f"has no topology (pass Workspace(topology=...))"
+            )
+        if not topo.has_zone(zone):
+            raise WiringError(
+                f"cannot place task {self.name!r}: topology {topo.name!r} has "
+                f"no zone {zone!r} (zones: {topo.zone_names()})"
+            )
+        self._decl.zone = zone
+        return self
+
+    @property
+    def zone(self) -> Optional[str]:
+        """The declared pin (None = unpinned; placement policy decides)."""
+        return self._decl.zone
 
     def buffer(self, n: int, slide: Optional[int] = None) -> "TaskHandle":
         """Buffer/window annotation on this task's sole input."""

@@ -26,6 +26,7 @@ from the same object.
 
 from __future__ import annotations
 
+import os
 from typing import Any, Callable, Iterable, Mapping, Optional, Union
 
 from repro.cache import MemoCache
@@ -35,6 +36,7 @@ from repro.core.policy import InputSpec
 from repro.core.provenance import ProvenanceRegistry
 from repro.core.store import ArtifactStore
 from repro.core.task import ServiceCall, SmartTask
+from repro.topology import Topology, default_topology
 
 from .executors import Executor, InlineExecutor, default_executor
 from .handles import Port, TaskDecl, TaskHandle, Wire, WireDecl, WiringError
@@ -147,11 +149,26 @@ class Workspace:
         registry: Optional[ProvenanceRegistry] = None,
         cache=None,
         max_rounds: int = 100,
+        topology: Union[Topology, bool, None] = None,
+        placement=None,
     ) -> None:
         self.name = name
         # executor=None defers to KOALJA_EXECUTOR (inline | concurrent) so
         # whole suites can smoke the threaded scheduler path via env.
         self.executor = executor or default_executor()
+        # topology=None defers to KOALJA_TOPOLOGY (flat | 3zone);
+        # topology=False forces flat regardless of env. placement is
+        # "pin" | "data_gravity" | a PlacementPolicy; None defers to
+        # KOALJA_PLACEMENT, then to the data_gravity default.
+        if topology is False:
+            self._topology = None
+        else:
+            self._topology = topology if topology is not None else default_topology()
+        self._placement = (
+            placement
+            if placement is not None
+            else (os.environ.get("KOALJA_PLACEMENT", "").strip().lower() or None)
+        )
         self._store = store or ArtifactStore()
         self._registry = registry or ProvenanceRegistry()
         # cache=None -> default MemoCache; cache=False -> caching disabled
@@ -341,6 +358,7 @@ class Workspace:
                     services=decl.services,
                     min_interval_s=decl.min_interval_s,
                     cache_ttl_s=decl.cache_ttl_s,
+                    zone=decl.zone,
                 )
             )
         for w in self._wires:
@@ -354,6 +372,8 @@ class Workspace:
             max_rounds=self._max_rounds,
             # the scheduler hands waves of ready tasks to this backend
             executor=self.executor,
+            topology=self._topology,
+            placement=self._placement,
         )
         return self._manager
 
@@ -489,6 +509,15 @@ class Workspace:
     def store(self) -> ArtifactStore:
         return self._store
 
+    @property
+    def topology(self) -> Optional[Topology]:
+        return self._topology
+
+    @property
+    def ledger(self):
+        """The extended-cloud transfer ledger (None on flat circuits)."""
+        return self._build().ledger
+
     def value_of(self, av: AnnotatedValue) -> Any:
         return self._store.get(av.uri)
 
@@ -515,10 +544,20 @@ class Workspace:
         avoided by the memo layer and bytes the circuit never moved. The
         ``scheduler`` block is the trigger-work scorecard: waves, queue
         depth high-water, and tasks-enqueued vs the polling-scan equivalent
-        the seed's round-robin engine would have burned."""
+        the seed's round-robin engine would have burned. The ``topology``
+        block (None on flat circuits) is the extended-cloud scorecard:
+        per-zone residents/executions, placement decisions, and the
+        transfer ledger's cross-zone bytes and energy."""
         out = self._build().stats()
         stats_fn = getattr(self.executor, "stats", None)
         out["executor"] = stats_fn() if stats_fn is not None else None
+        # a ZonedExecutor partitions waves by zone; surface its per-zone
+        # wave counters inside the topology block where readers look first
+        zone_waves = getattr(self.executor, "zone_waves", None)
+        if out.get("topology") is not None and zone_waves is not None:
+            out["topology"]["executor_zones"] = {
+                z: dict(v) for z, v in sorted(zone_waves.items())
+            }
         return out
 
     def tasks(self) -> list:

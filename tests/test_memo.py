@@ -269,11 +269,12 @@ def test_executor_stats_surface():
     import os
 
     env = os.environ.get("KOALJA_EXECUTOR", "inline").strip().lower()
-    expected = (
-        "ConcurrentExecutor"
-        if env in ("concurrent", "threads", "threadpool")
-        else "InlineExecutor"
-    )
+    if env in ("concurrent", "threads", "threadpool"):
+        expected = "ConcurrentExecutor"
+    elif env in ("zoned", "zoned-concurrent", "zoned_concurrent"):
+        expected = "ZonedExecutor"
+    else:
+        expected = "InlineExecutor"
     assert ex["backend"] == expected
     assert ex["pushes"] == 1
 

@@ -25,6 +25,7 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 WALKTHROUGHS = (
     "docs/provenance.md",
     "docs/scheduler.md",
+    "docs/extended-cloud.md",
 )
 
 # [text](target) — markdown links, excluding images handled identically
