@@ -21,6 +21,10 @@ each bench pins one qualitative claim to a number).
                                        naive all-to-cloud, with bit-identical
                                        provenance and merge order across
                                        Inline/Zoned executors
+  B11 journal overhead         §III.L  durable provenance journal: records/s
+                                       sustained, bytes on disk per event,
+                                       and the push-throughput cost of the
+                                       write-through vs in-memory stories
 """
 
 from __future__ import annotations
@@ -470,6 +474,57 @@ def bench_edge_placement(zones=3, sensors=8, rounds=3, n=256):
     }
 
 
+def bench_journal_overhead(pushes: int = 200):
+    """ISSUE 5: price the durable journal. The same 2-stage circuit is
+    pushed ``pushes`` times with fresh content (every firing executes) with
+    the journal off and on; the delta is the cost of durability, reported
+    as sustained journal records/sec and bytes on disk per record. A replay
+    at the end proves the log actually rehydrates (records == replayed)."""
+    import os
+    import tempfile
+
+    from repro.provenance import replay_journal
+
+    def build(journal_path):
+        ws = Workspace("bench-journal", journal_path=journal_path, topology=False)
+        a = ws.task(lambda x: {"y": x * 2.0}, name="a", inputs=["x"], outputs=["y"])
+        b = ws.task(lambda y: {"z": float(y.sum())}, name="b", inputs=["y"], outputs=["z"])
+        a["y"] >> b["y"]
+        return ws, a
+
+    def drive(ws, a):
+        t0 = time.perf_counter()
+        for i in range(pushes):
+            ws.push(a, x=np.full(64, float(i), np.float32))
+        return time.perf_counter() - t0
+
+    ws_mem, a_mem = build(False)
+    wall_memory = drive(ws_mem, a_mem)
+
+    path = os.path.join(tempfile.mkdtemp(prefix="koalja-bench-"), "bench.jsonl")
+    ws_j, a_j = build(path)
+    wall_journal = drive(ws_j, a_j)
+    ws_j.journal.close()
+    js = ws_j.journal.stats()
+    replayed = replay_journal(path)
+
+    return {
+        "pushes": pushes,
+        "records_written": js["records_written"],
+        "bytes_on_disk": js["bytes_on_disk"],
+        "bytes_per_record": js["bytes_on_disk"] / max(js["records_written"], 1),
+        "flushes": js["flushes"],
+        "records_per_s": js["records_written"] / max(wall_journal, 1e-9),
+        "wall_memory_s": wall_memory,
+        "wall_journal_s": wall_journal,
+        "overhead_x": wall_journal / max(wall_memory, 1e-9),
+        "replay_identical": (
+            replayed.registry.visitor_log("b") == ws_j.visitor_log("b")
+            and replayed.registry.design_map() == ws_j.design_map()
+        ),
+    }
+
+
 ALL = {
     "B1_metadata_overhead": bench_metadata_overhead,
     "B2_cache_reuse": bench_cache_reuse,
@@ -480,4 +535,5 @@ ALL = {
     "B7_concurrent_fanout": bench_concurrent_fanout,
     "B8_repeated_push": bench_repeated_push,
     "B10_edge_placement": bench_edge_placement,
+    "B11_journal_overhead": bench_journal_overhead,
 }

@@ -1,7 +1,7 @@
 """Benchmark harness: `PYTHONPATH=src python -m benchmarks.run`.
 
-Runs the paper-claim benchmarks (B1-B8) plus the data-pipeline throughput
-bench (B9), prints the results, and writes two artifacts:
+Runs the paper-claim benchmarks (B1-B8, B10, B11) plus the data-pipeline
+throughput bench (B9), prints the results, and writes two artifacts:
 
   - benchmarks/results/koalja_bench.json — the full run (local detail)
   - BENCH_koalja.json (repo top level)   — a compact per-bench summary of
@@ -63,6 +63,12 @@ _HEADLINES = {
     ],
     "B8_repeated_push": ["execution_reduction_x", "bytes_not_moved"],
     "B9_pipeline_throughput": ["batches_per_s", "tokens_per_s"],
+    "B11_journal_overhead": [
+        "records_per_s",
+        "bytes_per_record",
+        "overhead_x",
+        "replay_identical",
+    ],
     "B10_edge_placement": [
         "bytes_reduction_x",
         "bytes_crosszone_all_to_cloud",

@@ -96,6 +96,15 @@ class MemoCache:
         self.bytes_saved = 0
         # Concurrent waves consult the memo table from worker threads.
         self._lock = threading.RLock()
+        # optional durable write-through (repro.provenance.Journal)
+        self._journal = None
+
+    def bind_journal(self, journal) -> None:
+        """Attach a provenance journal: every memo hit appends a typed
+        ``cache_hit`` record, so short-circuited work is reconstructable
+        after a restart alongside the visitor-log entries it produced."""
+        with self._lock:
+            self._journal = journal
 
     def lookup(self, key: str) -> Optional[Any]:
         with self._lock:
@@ -110,6 +119,18 @@ class MemoCache:
                 self.misses += 1
                 return None
             self.hits += 1
+            if self._journal is not None:
+                self._journal.append(
+                    "cache_hit",
+                    {
+                        "key": key,
+                        "software_version": (
+                            value.get("software_version")
+                            if isinstance(value, dict)
+                            else None
+                        ),
+                    },
+                )
             return value
 
     def insert(self, key: str, value: Any, ttl_s: Optional[float] = None) -> None:

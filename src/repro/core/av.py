@@ -97,7 +97,7 @@ class Stamp:
     """One entry in an AV's travel document (paper fig. 8/9)."""
 
     task: str
-    event: str  # "produced" | "consumed" | "cached" | "transit" | "region"
+    event: str  # "produced" | "consumed" | "cached" | "transit" | "region" | "dropped"
     software_version: str  # code hash of the task that touched it
     timestamp: float
     region: str = "local"

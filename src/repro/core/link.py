@@ -102,6 +102,13 @@ class SmartLink:
         # payload bytes are charged separately (TransferLedger) only when a
         # consumer materializes them.
         self.crosszone_refs = 0
+        # Forensic sink for overflow drops (bound by the scheduler): a
+        # drop_oldest eviction logs a 'dropped' visit so the traveller's
+        # disappearance stays reconstructable, not just counted.
+        self._provenance = None
+
+    def bind_provenance(self, registry) -> None:
+        self._provenance = registry
 
     # -- data channel ---------------------------------------------------------
     def offer(self, av: AnnotatedValue, software_version: str = "?") -> None:
@@ -118,6 +125,7 @@ class SmartLink:
                 region=self.region,
                 note=f"{av.region}->{self.region}",
             )
+        dropped: Optional[AnnotatedValue] = None
         with self._not_full:
             if self.capacity is not None and len(self._queue) >= self.capacity:
                 if self.overflow == "error":
@@ -126,7 +134,7 @@ class SmartLink:
                         f"overflow='error')"
                     )
                 if self.overflow == "drop_oldest":
-                    self._queue.popleft()
+                    dropped = self._queue.popleft()
                     self.avs_dropped += 1
                 else:  # block
                     self.blocked_waits += 1
@@ -158,6 +166,26 @@ class SmartLink:
             else:
                 self.notifications_sent += 1
                 subscribers = tuple(self._subscribers)
+        # Outside the link lock (registry has its own): the evicted AV gets
+        # a 'dropped' stamp and a visitor-log entry at the consumer it never
+        # reached — before this, a drop_oldest eviction was a bare counter
+        # bump and the traveller silently vanished from every story.
+        if dropped is not None:
+            dropped.stamp(
+                self.name,
+                "dropped",
+                software_version,
+                region=self.region,
+                note=f"overflow=drop_oldest capacity={self.capacity}",
+            )
+            if self._provenance is not None:
+                self._provenance.log_visit(
+                    self.dst_task,
+                    dropped.uid,
+                    "dropped",
+                    software_version,
+                    note=f"link={self.name} overflow=drop_oldest",
+                )
         # callbacks run outside the lock: a subscriber may poll() or inspect
         # the link without deadlocking.
         for cb in subscribers:

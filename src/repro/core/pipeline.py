@@ -139,12 +139,23 @@ class PipelineManager:
         executor: Any = None,
         topology: Any = None,
         placement: Any = None,
+        journal: Any = None,
     ) -> None:
         self.pipeline = pipeline
         self.store = store or ArtifactStore()
         self.registry = registry or ProvenanceRegistry()
         # cache=None -> default MemoCache; cache=False -> caching disabled
         self.cache = MemoCache() if cache is None else (cache or None)
+        # Durable provenance (repro.provenance.Journal): registry, memo
+        # cache, and transfer ledger write through one append-only event
+        # log, so the forensic stories survive restarts (Workspace.
+        # from_journal replays them). Bound before _register_design so the
+        # design-map records land in the journal too.
+        self.journal = journal
+        if journal is not None:
+            self.registry.bind_journal(journal)
+            if self.cache is not None:
+                self.cache.bind_journal(journal)
         # max_rounds survives as the per-task fire budget per drain (cycle
         # rate control); it no longer multiplies full-graph scans.
         self.max_rounds = max_rounds
@@ -162,6 +173,11 @@ class PipelineManager:
             self.placement = make_placement(placement, topology)
             for t in pipeline.tasks.values():
                 t.bind_topology(topology, self.ledger)
+            if journal is not None:
+                # the zone/tier/link-cost spec rides the journal so a replay
+                # can rebuild the ledger — energy prices and all
+                journal.append("topology", topology.describe())
+                self.ledger.bind_journal(journal)
         else:
             self.ledger = None
             self.placement = None

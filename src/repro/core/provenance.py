@@ -10,6 +10,15 @@
    (paper fig. 10: ``(a) --b(precedes)--> "b"`` records).
 
 Strict record format; queries are structured (no regex scraping, per §III.L).
+
+Durability: the registry can write through to an append-only
+:class:`~repro.provenance.Journal` (``bind_journal``) — one typed JSONL
+record per registration/visit/edge/anomaly — so the stories survive process
+restarts and replay via ``Workspace.from_journal``. Every visitor entry also
+carries a registry-assigned monotonic ``seq`` (assigned under the lock, so
+it is a total order over this registry's events), which is the cross-task
+ordering key: wall clocks tie on coarse granularities, sequence numbers
+never do.
 """
 
 from __future__ import annotations
@@ -21,7 +30,7 @@ import time
 from collections import defaultdict
 from typing import Any, Iterable, Optional
 
-from .av import AnnotatedValue
+from .av import AnnotatedValue, Stamp
 
 
 @dataclasses.dataclass
@@ -30,17 +39,27 @@ class VisitorEntry:
 
     task: str
     av_uid: str
-    event: str  # "arrived" | "executed" | "emitted" | "cache_hit" | "anomaly"
+    event: str  # "arrived" | "executed" | "emitted" | "cache_hit" | "anomaly" | "dropped"
     timestamp: float
     software_version: str
     note: str = ""
+    # Monotonic registry event number — the deterministic ordering key for
+    # cross-task queries (and the replay order after a restart).
+    seq: int = 0
 
     def to_record(self) -> dict:
         return dataclasses.asdict(self)
 
 
 class ProvenanceRegistry:
-    """Pipeline-manager-held registry: the 'secure location' for travel docs."""
+    """Pipeline-manager-held registry: the 'secure location' for travel docs.
+
+    All reads and writes hold ``_lock`` (an RLock — ``lineage`` recurses):
+    concurrent wave workers register AVs and log visits while forensic
+    queries iterate the same dicts, and an unlocked iteration would throw
+    ``dictionary changed size during iteration`` or return a lineage with
+    parents missing mid-recursion.
+    """
 
     def __init__(self) -> None:
         self._avs: dict = {}  # uid -> AnnotatedValue
@@ -52,12 +71,42 @@ class ProvenanceRegistry:
         # ConcurrentExecutor workers register AVs and log visits from
         # multiple threads; an RLock keeps the stories coherent.
         self._lock = threading.RLock()
+        # monotonic event counter (visitor-log seq); survives rehydration
+        self._next_seq = 0
+        # optional durable write-through (repro.provenance.Journal)
+        self._journal = None
+
+    # -- durability ----------------------------------------------------------
+    def bind_journal(self, journal) -> None:
+        """Attach an append-only journal; every subsequent registration,
+        visit, edge, and anomaly writes through. Replayed registries stay
+        unbound — rehydration never re-journals history.
+
+        Binding a *resumed* journal (one with records already on disk)
+        advances the event counter past the highest journaled visit seq, so
+        post-restart entries keep the total order ``visits_of`` sorts by."""
+        with self._lock:
+            self._journal = journal
+            if journal is not None:
+                self._next_seq = max(
+                    self._next_seq,
+                    getattr(journal, "resumed_visit_seq", -1) + 1,
+                )
+
+    @property
+    def journal(self):
+        return self._journal
 
     # -- registration --------------------------------------------------------
     def register_av(self, av: AnnotatedValue, parents: Iterable[str] = ()) -> None:
+        parents = list(parents)
         with self._lock:
             self._avs[av.uid] = av
-            self._lineage[av.uid] = list(parents)
+            self._lineage[av.uid] = parents
+            if self._journal is not None:
+                self._journal.append(
+                    "av", {"av": av.to_record(), "parents": parents}
+                )
 
     def log_visit(
         self,
@@ -67,16 +116,20 @@ class ProvenanceRegistry:
         software_version: str,
         note: str = "",
     ) -> None:
-        entry = VisitorEntry(
-            task=task,
-            av_uid=av_uid,
-            event=event,
-            timestamp=time.time(),
-            software_version=software_version,
-            note=note,
-        )
         with self._lock:
+            entry = VisitorEntry(
+                task=task,
+                av_uid=av_uid,
+                event=event,
+                timestamp=time.time(),
+                software_version=software_version,
+                note=note,
+                seq=self._next_seq,
+            )
+            self._next_seq += 1
             self._visitor_logs[task].append(entry)
+            if self._journal is not None:
+                self._journal.append("visit", entry.to_record())
 
     def register_task(
         self, task: str, inputs: list, outputs: list, version: str
@@ -87,26 +140,80 @@ class ProvenanceRegistry:
                 "outputs": list(outputs),
                 "version": version,
             }
+            if self._journal is not None:
+                self._journal.append(
+                    "task",
+                    {
+                        "task": task,
+                        "inputs": list(inputs),
+                        "outputs": list(outputs),
+                        "version": version,
+                    },
+                )
 
     def add_design_edge(self, src: str, relation: str, dst: str) -> None:
         with self._lock:
             self._design_edges.add((src, relation, dst))
+            if self._journal is not None:
+                self._journal.append(
+                    "edge", {"src": src, "relation": relation, "dst": dst}
+                )
 
     def record_anomaly(self, task: str, note: str) -> None:
         with self._lock:
-            self.anomalies.append(
-                {"task": task, "note": note, "timestamp": time.time()}
-            )
+            rec = {"task": task, "note": note, "timestamp": time.time()}
+            self.anomalies.append(rec)
+            if self._journal is not None:
+                self._journal.append("anomaly", rec)
             self.log_visit(task, "-", "anomaly", self.task_version(task), note)
 
     def task_version(self, task: str) -> str:
-        return self._task_promises.get(task, {}).get("version", "?")
+        with self._lock:
+            return self._task_promises.get(task, {}).get("version", "?")
+
+    # -- replay (journal rehydration; see repro.provenance.journal) ----------
+    def restore_av(self, data: dict) -> None:
+        """Rebuild one AV (and its lineage) from a journaled ``av`` record.
+        The travel document is restored as of registration time — stamps
+        added later in the original process were link/task-side mutations
+        the journal does not track."""
+        rec = dict(data["av"])
+        stamps = [Stamp(**s) for s in rec.get("travel_document", [])]
+        av = AnnotatedValue(
+            uid=rec["uid"],
+            source_task=rec["source_task"],
+            uri=rec["uri"],
+            chash=rec["chash"],
+            created_at=rec["created_at"],
+            region=rec.get("region", "local"),
+            meta=dict(rec.get("meta") or {}),
+            travel_document=stamps,
+        )
+        with self._lock:
+            self._avs[av.uid] = av
+            self._lineage[av.uid] = list(data.get("parents", []))
+
+    def restore_visit(self, data: dict) -> None:
+        """Rebuild one visitor-log entry from a journaled ``visit`` record,
+        preserving its original seq (and advancing the counter past it so
+        post-rehydration events keep the total order)."""
+        entry = VisitorEntry(**data)
+        with self._lock:
+            self._visitor_logs[entry.task].append(entry)
+            self._next_seq = max(self._next_seq, entry.seq + 1)
+
+    def restore_anomaly(self, data: dict) -> None:
+        """Rebuild one anomaly record (its visitor-log line replays
+        separately — ``record_anomaly`` journaled both)."""
+        with self._lock:
+            self.anomalies.append(dict(data))
 
     # -- story 1: traveller log ----------------------------------------------
     def traveller_log(self, av_uid: str) -> list:
         """Full journey of one artifact: every stamp, in order."""
-        av = self._avs[av_uid]
-        return [s.to_record() for s in av.travel_document]
+        with self._lock:
+            av = self._avs[av_uid]
+            return [s.to_record() for s in av.travel_document]
 
     def lineage(self, av_uid: str, depth: int = -1) -> dict:
         """Recursive forensic reconstruction: which AVs (and software
@@ -117,27 +224,28 @@ class ProvenanceRegistry:
         pointer to the AV the *original* run produced; the node includes that
         run's lineage too, so a short-circuited result reconstructs exactly
         like a computed one."""
-        av = self._avs[av_uid]
-        node = {
-            "uid": av_uid,
-            "source_task": av.source_task,
-            "software_version": next(
-                (s.software_version for s in av.travel_document if s.event == "produced"),
-                "?",
-            ),
-            "chash": av.chash,
-            "parents": [],
-        }
-        if av.meta.get("cache_hit"):
-            node["cache_hit"] = True
-        if depth != 0:
-            for p in self._lineage.get(av_uid, []):
-                if p in self._avs:
-                    node["parents"].append(self.lineage(p, depth - 1))
-            memo_of = av.meta.get("memo_of")
-            if memo_of and memo_of in self._avs:
-                node["memo_of"] = self.lineage(memo_of, depth - 1)
-        return node
+        with self._lock:
+            av = self._avs[av_uid]
+            node = {
+                "uid": av_uid,
+                "source_task": av.source_task,
+                "software_version": next(
+                    (s.software_version for s in av.travel_document if s.event == "produced"),
+                    "?",
+                ),
+                "chash": av.chash,
+                "parents": [],
+            }
+            if av.meta.get("cache_hit"):
+                node["cache_hit"] = True
+            if depth != 0:
+                for p in self._lineage.get(av_uid, []):
+                    if p in self._avs:
+                        node["parents"].append(self.lineage(p, depth - 1))
+                memo_of = av.meta.get("memo_of")
+                if memo_of and memo_of in self._avs:
+                    node["memo_of"] = self.lineage(memo_of, depth - 1)
+            return node
 
     # -- story 2: checkpoint visitor log --------------------------------------
     def visitor_log(self, task: str) -> list:
@@ -145,28 +253,33 @@ class ProvenanceRegistry:
             return [e.to_record() for e in self._visitor_logs[task]]
 
     def visits_of(self, av_uid: str) -> list:
-        """All checkpoints an AV passed through (cross-task query)."""
+        """All checkpoints an AV passed through (cross-task query), in event
+        order. Ordered by the monotonic ``seq`` — two visits in one clock
+        tick used to tie-break arbitrarily on the timestamp float."""
         out = []
         with self._lock:
             for task, entries in self._visitor_logs.items():
                 for e in entries:
                     if e.av_uid == av_uid:
                         out.append(e.to_record())
-        return sorted(out, key=lambda r: r["timestamp"])
+        return sorted(out, key=lambda r: r["seq"])
 
     # -- story 3: design map ---------------------------------------------------
     def design_map(self) -> dict:
         """Topology + promises + anomalies (the invariant concept map)."""
-        return {
-            "tasks": dict(self._task_promises),
-            "edges": sorted(self._design_edges),
-            "anomalies": list(self.anomalies),
-        }
+        with self._lock:
+            return {
+                "tasks": {t: dict(p) for t, p in self._task_promises.items()},
+                "edges": sorted(self._design_edges),
+                "anomalies": [dict(a) for a in self.anomalies],
+            }
 
     def design_map_text(self) -> str:
         """Paper fig. 10 rendering: '(a) --b(precedes)--> \"b\"'."""
+        with self._lock:
+            edges = sorted(self._design_edges)
         lines = ["<begin NON-LOCAL CAUSE>"]
-        for src, rel, dst in sorted(self._design_edges):
+        for src, rel, dst in edges:
             lines.append(f'({src}) --b({rel})--> "{dst}"')
         lines.append("<end NON-LOCAL CAUSE>")
         return "\n".join(lines)
@@ -175,15 +288,18 @@ class ProvenanceRegistry:
     def overhead_bytes(self) -> int:
         """Metadata footprint — supports the paper's 'cheap to keep' claim."""
         n = 0
-        for av in self._avs.values():
-            n += len(json.dumps(av.to_record(), default=repr))
-        for entries in self._visitor_logs.values():
-            for e in entries:
-                n += len(json.dumps(e.to_record()))
+        with self._lock:
+            for av in self._avs.values():
+                n += len(json.dumps(av.to_record(), default=repr))
+            for entries in self._visitor_logs.values():
+                for e in entries:
+                    n += len(json.dumps(e.to_record()))
         return n
 
     def all_avs(self) -> list:
-        return list(self._avs)
+        with self._lock:
+            return list(self._avs)
 
     def get_av(self, uid: str) -> AnnotatedValue:
-        return self._avs[uid]
+        with self._lock:
+            return self._avs[uid]

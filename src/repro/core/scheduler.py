@@ -104,6 +104,9 @@ class Scheduler:
             if id(link) not in self._subscribed:
                 self._subscribed.add(id(link))
                 link.subscribe(self._on_notify)
+                # overflow drops on this link log a 'dropped' visit (and
+                # journal record) instead of silently vanishing
+                link.bind_provenance(self.manager.registry)
 
     def _on_notify(self, link, av) -> None:
         with self._lock:

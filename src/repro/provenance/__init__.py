@@ -1,0 +1,25 @@
+"""repro.provenance — durable persistence for the forensic stories.
+
+The in-memory registry lives in :mod:`repro.core.provenance` (it is part of
+the engine); this package holds what makes it *survive the process*: the
+append-only :class:`Journal`, the crash-tolerant reader, and the
+:func:`replay_journal` rehydrator behind ``Workspace.from_journal``.
+"""
+
+from .journal import (
+    FORMAT_VERSION,
+    Journal,
+    JournalCorruptError,
+    ReplayedJournal,
+    read_records,
+    replay_journal,
+)
+
+__all__ = [
+    "FORMAT_VERSION",
+    "Journal",
+    "JournalCorruptError",
+    "ReplayedJournal",
+    "read_records",
+    "replay_journal",
+]

@@ -41,12 +41,26 @@ class TransferLedger:
         self.bytes_not_moved_crosszone = 0  # dedup: already resident in dst
         self.crosszone_transfers = 0
         self.local_handovers = 0  # same-zone materializations (free)
+        # optional durable write-through (repro.provenance.Journal)
+        self._journal = None
+
+    def bind_journal(self, journal) -> None:
+        """Attach a provenance journal: every residency registration and
+        materialization charge appends a typed ``ledger`` record (emitted
+        under the ledger lock, so journal order *is* charge order), letting
+        a replay rebuild byte/energy totals bit-identically."""
+        with self._lock:
+            self._journal = journal
 
     def register_resident(self, chash: str, zone: Optional[str]) -> None:
         if zone is None:
             return
         with self._lock:
             self._resident.add((chash, zone))
+            if self._journal is not None:
+                self._journal.append(
+                    "ledger", {"op": "resident", "chash": chash, "zone": zone}
+                )
 
     def on_materialize(
         self,
@@ -60,6 +74,17 @@ class TransferLedger:
         if src_zone is None or dst_zone is None:
             return False
         with self._lock:
+            if self._journal is not None:
+                self._journal.append(
+                    "ledger",
+                    {
+                        "op": "materialize",
+                        "chash": chash,
+                        "nbytes": int(nbytes),
+                        "src": src_zone,
+                        "dst": dst_zone,
+                    },
+                )
             if src_zone == dst_zone:
                 self.local_handovers += 1
                 self._resident.add((chash, dst_zone))

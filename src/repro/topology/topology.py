@@ -188,6 +188,27 @@ class Topology:
             },
         }
 
+    @classmethod
+    def from_spec(cls, spec: dict) -> "Topology":
+        """Reconstruct a Topology from a :meth:`describe` dict — the inverse
+        used by journal replay, so a rehydrated transfer ledger prices
+        energy with the same zone tiers and link costs as the original
+        process."""
+        topo = cls(spec.get("name", "topology"), default_zone=spec.get("default_zone"))
+        for zname, tier in (spec.get("zones") or {}).items():
+            topo.zone(zname, tier=tier)
+        for pair, costs in (spec.get("links") or {}).items():
+            src, _, dst = pair.partition("->")
+            topo.link(
+                src,
+                dst,
+                bandwidth_mbps=costs.get("bandwidth_mbps"),
+                latency_ms=costs.get("latency_ms"),
+                energy_j_per_mb=costs.get("energy_j_per_mb"),
+                symmetric=False,  # describe() lists both directions
+            )
+        return topo
+
     # -- canned shapes ------------------------------------------------------
     @classmethod
     def three_zone(cls, name: str = "three-zone") -> "Topology":

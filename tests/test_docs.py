@@ -46,3 +46,11 @@ def test_scheduler_walkthrough_registered_and_executes():
     assert "docs/scheduler.md" in mod.WALKTHROUGHS
     n = mod.run_walkthrough("docs/scheduler.md")
     assert n >= 5, "scheduler walkthrough lost its code blocks"
+
+
+def test_journal_walkthrough_registered_and_executes():
+    mod = _load_check_docs()
+    assert "docs/journal.md" in mod.WALKTHROUGHS
+    assert "docs/journal.md" in (REPO / "README.md").read_text()
+    n = mod.run_walkthrough("docs/journal.md")
+    assert n >= 4, "journal walkthrough lost its code blocks"

@@ -26,6 +26,7 @@ WALKTHROUGHS = (
     "docs/provenance.md",
     "docs/scheduler.md",
     "docs/extended-cloud.md",
+    "docs/journal.md",
 )
 
 # [text](target) — markdown links, excluding images handled identically
