@@ -78,6 +78,13 @@ _HEADLINES = {
         "provenance_events_identical",
         "zoned_ledger_identical",
     ],
+    "B12_process_pool": [
+        "speedup",
+        "payload_bytes_over_pipe",
+        "control_bytes_sent",
+        "provenance_events_identical",
+        "merge_fcfs_identical",
+    ],
 }
 
 

@@ -26,6 +26,19 @@ from typing import Any, Optional
 _AV_COUNTER = itertools.count()
 
 
+def reserve_uid_numbers(n: int) -> list:
+    """Claim ``n`` consecutive-draw uid numbers from the process-global AV
+    counter without minting AVs yet.
+
+    The multi-process runtime (:mod:`repro.runtime`) mints output AVs in a
+    *runner* process but their identity must live in the parent's uid space:
+    the parent reserves the numbers up front, ships them with the work
+    order, and the runner builds uids via ``produce(..., uid_no=...)`` — so
+    a merged registry can never collide with AVs minted locally in between.
+    """
+    return [next(_AV_COUNTER) for _ in range(max(0, int(n)))]
+
+
 def _stable_hash_bytes(data: bytes) -> str:
     return hashlib.sha256(data).hexdigest()[:16]
 
@@ -129,8 +142,11 @@ class AnnotatedValue:
         software_version: str,
         region: str = "local",
         meta: Optional[dict] = None,
+        uid_no: Optional[int] = None,
     ) -> "AnnotatedValue":
-        uid = f"av-{next(_AV_COUNTER):08d}-{payload_hash[:8]}"
+        if uid_no is None:
+            uid_no = next(_AV_COUNTER)
+        uid = f"av-{uid_no:08d}-{payload_hash[:8]}"
         av = cls(
             uid=uid,
             source_task=source_task,

@@ -97,6 +97,18 @@ class ProvenanceRegistry:
     def journal(self):
         return self._journal
 
+    def reserve_seqs(self, n: int) -> int:
+        """Claim ``n`` consecutive visitor-log seq numbers and return the
+        first. The multi-process runtime reserves a window per remote
+        firing, ships the start with the work order, and the runner stamps
+        its visit records inside the window — so entries streamed back via
+        ``restore_visit`` interleave deterministically with entries logged
+        here, and ``visits_of``'s total order never collides."""
+        with self._lock:
+            start = self._next_seq
+            self._next_seq += max(0, int(n))
+            return start
+
     # -- registration --------------------------------------------------------
     def register_av(self, av: AnnotatedValue, parents: Iterable[str] = ()) -> None:
         parents = list(parents)

@@ -82,6 +82,10 @@ class Scheduler:
         self._throttled: set = set()
         # -- stats (trigger-work sustainability counters) ------------------
         self.waves = 0
+        # widest wave formed: the parallelism a pooled backend (thread or
+        # process, repro.runtime) could extract from this circuit — width 1
+        # everywhere means a pool buys nothing
+        self.max_wave_width = 0
         self.tasks_enqueued = 0
         self.tasks_executed = 0
         self.notifications_received = 0
@@ -165,6 +169,8 @@ class Scheduler:
                     continue
                 break
             self.waves += 1
+            if len(wave) > self.max_wave_width:
+                self.max_wave_width = len(wave)
             # A polling engine would have scanned every task this round.
             self.polling_scan_equivalent += n_tasks
             # Extended-cloud placement happens here, on the scheduler thread,
@@ -337,6 +343,7 @@ class Scheduler:
         return {
             "backend": type(self._runner()).__name__,
             "waves": self.waves,
+            "max_wave_width": self.max_wave_width,
             "tasks_enqueued": enq,
             "tasks_executed": self.tasks_executed,
             "notifications_received": self.notifications_received,

@@ -85,6 +85,12 @@ class ArtifactStore:
         self.evictions_local = 0
         self.cross_region_pins = 0
         self.cross_region_bytes = 0
+        # cross-process sharing counters (repro.runtime): payloads staged
+        # into / registered from the shared object tier — the bytes that
+        # moved via storage so they would NOT have to move over a pipe
+        self.publishes = 0
+        self.bytes_published = 0
+        self.adopts = 0
         if object_dir:
             os.makedirs(object_dir, exist_ok=True)
 
@@ -125,8 +131,14 @@ class ArtifactStore:
         if os.path.exists(path):
             return
         t0 = time.perf_counter()
-        with open(path, "wb") as f:
+        # Write-then-rename: the object tier is shared across worker
+        # processes (repro.runtime), and a writer killed mid-write must
+        # never leave a half-file at the content-addressed path — existence
+        # of the final path is the "resident" signal everyone trusts.
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "wb") as f:
             self._dump(payload, f)
+        os.replace(tmp, path)
         self._lat["object"].add(time.perf_counter() - t0)
         self.bytes_moved_to_object += nbytes
 
@@ -270,6 +282,85 @@ class ArtifactStore:
                 self.bytes_spilled += nbytes
             self.evictions_local += 1
 
+    # -- cross-process sharing (repro.runtime) -------------------------------
+    def ensure_object_dir(self) -> str:
+        """Make sure this store has an on-disk object tier and return its
+        path. The object directory is the only payload channel worker
+        processes share with the parent — a store born without one (the
+        common in-memory default) gets a per-store temp directory the first
+        time a process pool spins up."""
+        import tempfile
+
+        with self._lock:
+            if self.object_dir is None:
+                self.object_dir = tempfile.mkdtemp(prefix="koalja-store-")
+            else:
+                os.makedirs(self.object_dir, exist_ok=True)
+            return self.object_dir
+
+    def publish(self, chash: str) -> int:
+        """Ensure a content hash resident in the local tier also has an
+        object-tier copy, so a worker process can resolve it by hash.
+        Returns the bytes written (0 when the object tier already had it —
+        the reference crossed, the payload did not move again)."""
+        with self._lock:
+            if self.object_dir is None:
+                raise RuntimeError(
+                    "publish() needs an object tier — call ensure_object_dir()"
+                )
+            if self._in_object(chash):
+                return 0
+            if chash not in self._local:
+                raise KeyError(chash)
+            payload = self._local[chash]
+            nbytes = self._sizes.get(chash) or self._nbytes(payload)
+            self._write_object(chash, payload, nbytes)
+            self.publishes += 1
+            self.bytes_published += nbytes
+            return nbytes
+
+    def export(self, payload: Any) -> tuple:
+        """Worker-side ``put``: write a produced payload straight to the
+        *shared* object tier (never this process's private local tier) and
+        report whether the bytes already existed there.
+
+        Returns ``(uri, chash, nbytes, existed)``. ``existed`` reflects the
+        object tier *before* this write — the parent's ``adopt`` uses it to
+        keep ``bytes_not_moved`` accounting identical to an in-process
+        ``put`` of the same content."""
+        h = content_hash(payload)
+        nbytes = self._nbytes(payload)
+        with self._lock:
+            if self.object_dir is None:
+                raise RuntimeError(
+                    "export() needs an object tier — call ensure_object_dir()"
+                )
+            self.puts += 1
+            self._sizes.setdefault(h, nbytes)
+            existed = self._in_object(h)
+            if not existed:
+                self._write_object(h, payload, nbytes)
+        return f"object://{h}", h, nbytes, bool(existed)
+
+    def adopt(self, chash: str, nbytes: int, existed: bool = False) -> str:
+        """Parent-side bookkeeping for a payload a worker already exported
+        to the shared object tier: register the size, count the put, and
+        credit ``bytes_not_moved`` exactly when an in-process ``put`` would
+        have (content already in this local tier, or already in the object
+        tier before the worker wrote). Returns the URI to mint the AV with."""
+        nbytes = int(nbytes)
+        with self._lock:
+            self.puts += 1
+            self.adopts += 1
+            self._sizes.setdefault(chash, nbytes)
+            if chash in self._local:
+                self._local.move_to_end(chash)
+                self.bytes_not_moved += nbytes
+                return f"local://{chash}"
+            if existed:
+                self.bytes_not_moved += nbytes
+            return f"object://{chash}"
+
     def nbytes_of(self, chash: str) -> Optional[int]:
         """Known size of a content hash (any hash ever put/seen), or None.
         The transfer ledger and data-gravity placement price movement by
@@ -330,5 +421,8 @@ class ArtifactStore:
             "evictions_local": self.evictions_local,
             "cross_region_pins": self.cross_region_pins,
             "cross_region_bytes": self.cross_region_bytes,
+            "publishes": self.publishes,
+            "bytes_published": self.bytes_published,
+            "adopts": self.adopts,
             "rho": self.rho,
         }

@@ -12,6 +12,7 @@ outputs (or a single value for single-output tasks).
 
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import inspect
 import time
@@ -23,6 +24,42 @@ from .av import AnnotatedValue, content_hash, is_ghost
 from .policy import InputSpec, SnapshotPolicy
 from .provenance import ProvenanceRegistry
 from .store import ArtifactStore
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """A cache-missed firing, frozen between snapshot and user code.
+
+    ``begin_execution`` produces one when the memo layer cannot answer; the
+    caller then runs the user function wherever it likes — on this thread
+    (``execute``), or in a worker process (:mod:`repro.runtime`) that only
+    ever sees the plan's *references* — and completes the firing with
+    ``finish_execution`` / ``finish_remote``.
+    """
+
+    snap: dict  # input name -> AV | [AVs] (the formed snapshot)
+    in_hashes: dict  # input name -> chash | [chashes]
+    parent_uids: list  # lineage parents for every output AV
+    key: str  # memo key (already looked up — it missed)
+    use_cache: bool  # memoize the result (False for sources / cache off)
+
+    def snapshot_refs(self) -> dict:
+        """Picklable reference view of the snapshot — ``(uri, chash)`` plus
+        AV metadata, never payloads — for shipping to a worker process."""
+
+        def ref(av: AnnotatedValue) -> dict:
+            return {
+                "uid": av.uid,
+                "uri": av.uri,
+                "chash": av.chash,
+                "region": av.region,
+                "meta": dict(av.meta),
+            }
+
+        return {
+            name: [ref(a) for a in val] if isinstance(val, list) else ref(val)
+            for name, val in self.snap.items()
+        }
 
 
 def software_version_of(fn: Callable) -> str:
@@ -177,6 +214,30 @@ class SmartTask:
         wave order, so downstream arrival seqs (merge FCFS) stay
         deterministic regardless of which worker finished first.
         """
+        status, payload = self.begin_execution(store, registry, cache)
+        if status == "hit":
+            if emit:
+                self._emit(payload)
+            return payload
+        plan = payload
+        result, dt = self.run_user_fn(plan, store)
+        return self.finish_execution(
+            plan, result, dt, store, registry, cache, emit=emit
+        )
+
+    def begin_execution(
+        self,
+        store: ArtifactStore,
+        registry: ProvenanceRegistry,
+        cache: Optional[MemoCache] = None,
+    ) -> tuple:
+        """Phase 1 of a firing: settle zone refs, form the snapshot, log
+        arrivals, and consult the memo cache. Returns ``("hit", out_avs)``
+        when the memo layer answered (AVs minted, nothing left to run), or
+        ``("run", ExecutionPlan)`` when user code must execute — locally via
+        ``run_user_fn`` + ``finish_execution``, or in a worker process via
+        the plan's reference view (:mod:`repro.runtime`). Neither path
+        emits; that stays with the caller (the scheduler's serial step)."""
         # Settle deferred zone-crossing counts now that placement has fixed
         # this firing's zone: a ref "crossed" only if its birth zone differs
         # from where consumption actually happens (hash-only ghost
@@ -268,14 +329,24 @@ class SmartTask:
                         note=f"memo_of={orig_uid}" if orig_uid else "",
                     )
                     out_avs[oname] = av
-                if emit:
-                    self._emit(out_avs)
-                return out_avs
+                return ("hit", out_avs)
 
+        plan = ExecutionPlan(
+            snap=snap,
+            in_hashes=in_hashes,
+            parent_uids=parent_uids,
+            key=key,
+            use_cache=cache is not None,
+        )
+        return ("run", plan)
+
+    def run_user_fn(self, plan: ExecutionPlan, store: ArtifactStore) -> tuple:
+        """Phase 2 (local): materialize the plan's snapshot and run the user
+        function on the calling thread. Returns ``(result, wall_seconds)``."""
         # materialize payloads (Principle 2: pin near the dependent) — this
         # is the only point where input bytes actually move
         kwargs = {}
-        for name, val in snap.items():
+        for name, val in plan.snap.items():
             if isinstance(val, list):
                 kwargs[name] = [self._materialize(store, a) for a in val]
             else:
@@ -286,6 +357,25 @@ class SmartTask:
         t0 = time.perf_counter()
         result = self.fn(**kwargs)
         dt = time.perf_counter() - t0
+        return result, dt
+
+    def finish_execution(
+        self,
+        plan: ExecutionPlan,
+        result: Any,
+        dt: float,
+        store: ArtifactStore,
+        registry: ProvenanceRegistry,
+        cache: Optional[MemoCache] = None,
+        *,
+        emit: bool = True,
+    ) -> dict:
+        """Phase 3: count the execution, store outputs, mint + register the
+        output AVs, memoize, and (optionally) emit — exactly the tail of the
+        classic single-call ``execute``."""
+        parent_uids, key = plan.parent_uids, plan.key
+        if not plan.use_cache:
+            cache = None
         self.executions += 1
         if self.zone is not None:
             self.zone_executions[self.zone] = self.zone_executions.get(self.zone, 0) + 1
@@ -344,6 +434,102 @@ class SmartTask:
         if cache is not None and not any_ghost:
             cache.insert(
                 key,
+                make_record(
+                    self.version, outputs_rec, out_uids, out_nbytes,
+                    birth_zone=self.zone,
+                ),
+                ttl_s=self.cache_ttl_s,
+            )
+        if emit:
+            self._emit(out_avs)
+        return out_avs
+
+    # -- remote completion (repro.runtime) ----------------------------------
+    def account_remote_inputs(self, store: ArtifactStore, plan: ExecutionPlan) -> None:
+        """Replicate ``_materialize``'s transfer-ledger charges for a firing
+        whose payload fetches happened in a worker process. The worker's
+        forked ledger is invisible here, so the parent charges the same
+        bytes, in the same snapshot order, against its own ledger — keeping
+        cross-zone byte/energy totals identical to an in-process run."""
+        if self.ledger is None:
+            return
+        for _name, val in plan.snap.items():
+            for av in val if isinstance(val, list) else [val]:
+                if av.uri.startswith("ghost://"):
+                    continue
+                nbytes = av.meta.get("nbytes") or store.nbytes_of(av.chash) or 0
+                self.ledger.on_materialize(
+                    av.chash, int(nbytes), av.meta.get("zone"), self.zone
+                )
+
+    def finish_remote(
+        self,
+        plan: ExecutionPlan,
+        outcome: dict,
+        store: ArtifactStore,
+        registry: ProvenanceRegistry,
+        cache: Optional[MemoCache] = None,
+        *,
+        emit: bool = False,
+    ) -> dict:
+        """Complete a firing whose user code ran in a worker process.
+
+        ``outcome`` is the worker's reference-only reply (see
+        :mod:`repro.runtime.worker`): per-output ``(uri, chash, nbytes)``
+        specs, the wall time, and any frozen service responses. All
+        provenance side effects — ledger charges, execution counters, AV
+        minting, visitor-log entries, memo insert — happen *here*, in the
+        parent, in exactly the order ``finish_execution`` produces them; the
+        worker only computed bytes and parked them in the shared object
+        tier. A retried wave therefore cannot double-register anything: a
+        worker that died mid-task left no parent-side state at all."""
+        self.account_remote_inputs(store, plan)
+        for sname, calls in (outcome.get("services") or {}).items():
+            svc = self.services.get(sname)
+            if svc is not None:
+                svc.frozen_responses.extend(calls)
+        dt = float(outcome["wall_s"])
+        self.executions += 1
+        if self.zone is not None:
+            self.zone_executions[self.zone] = self.zone_executions.get(self.zone, 0) + 1
+        registry.log_visit(
+            self.name, "-", "executed", self.version, note=f"wall={dt:.6f}s"
+        )
+        out_avs, outputs_rec, out_uids, out_nbytes = {}, {}, {}, {}
+        any_ghost = False
+        for oname in self.outputs:
+            spec = outcome["outputs"][oname]
+            chash = spec["chash"]
+            if spec.get("ghost"):
+                any_ghost = True
+                meta = {"ghost": True, "ghost_spec": spec.get("ghost_spec")}
+                if self.zone is not None:
+                    meta["zone"] = self.zone
+                av = AnnotatedValue.produce(
+                    chash, f"ghost://{chash}", self.name, self.version,
+                    region=self.region, meta=meta,
+                )
+            else:
+                nbytes = int(spec["nbytes"])
+                uri = store.adopt(chash, nbytes, existed=spec.get("existed", False))
+                meta = None
+                if self.zone is not None:
+                    meta = {"zone": self.zone, "nbytes": nbytes}
+                    if self.ledger is not None:
+                        self.ledger.register_resident(chash, self.zone)
+                av = AnnotatedValue.produce(
+                    chash, uri, self.name, self.version, region=self.region,
+                    meta=meta,
+                )
+                outputs_rec[oname] = (uri, chash)
+                out_uids[oname] = av.uid
+                out_nbytes[oname] = nbytes
+            registry.register_av(av, parents=plan.parent_uids)
+            registry.log_visit(self.name, av.uid, "emitted", self.version)
+            out_avs[oname] = av
+        if plan.use_cache and cache is not None and not any_ghost:
+            cache.insert(
+                plan.key,
                 make_record(
                     self.version, outputs_rec, out_uids, out_nbytes,
                     birth_zone=self.zone,

@@ -11,8 +11,10 @@ from .journal import (
     Journal,
     JournalCorruptError,
     ReplayedJournal,
+    merge_segments,
     read_records,
     replay_journal,
+    replay_segments,
 )
 
 __all__ = [
@@ -20,6 +22,8 @@ __all__ = [
     "Journal",
     "JournalCorruptError",
     "ReplayedJournal",
+    "merge_segments",
     "read_records",
     "replay_journal",
+    "replay_segments",
 ]

@@ -44,7 +44,7 @@ import json
 import os
 import threading
 import time
-from typing import Any, Optional
+from typing import Any, Iterable, Optional
 
 FORMAT_VERSION = 1
 
@@ -67,8 +67,15 @@ class Journal:
         path: str,
         flush_every_n: Optional[int] = None,
         workspace: str = "",
+        segment: Optional[str] = None,
     ) -> None:
         self.path = str(path)
+        # Non-None marks this file as a *segment* of a parent journal (one
+        # per remote zone runner): its records carry seqs reserved from the
+        # parent's global sequence space, and merge_segments later folds the
+        # files back into one totally-ordered stream. The segment's own meta
+        # header is bookkeeping, not history — merges drop it.
+        self.segment = segment
         if flush_every_n is None:
             flush_every_n = int(os.environ.get("KOALJA_JOURNAL_FLUSH", "64"))
         self.flush_every_n = max(1, int(flush_every_n))
@@ -108,14 +115,14 @@ class Journal:
                 self._truncate_to_intact_prefix()
         self._fh = open(self.path, "a", encoding="utf-8")
         if fresh:
-            self.append(
-                "meta",
-                {
-                    "workspace": workspace,
-                    "format": FORMAT_VERSION,
-                    "created_at": time.time(),
-                },
-            )
+            meta = {
+                "workspace": workspace,
+                "format": FORMAT_VERSION,
+                "created_at": time.time(),
+            }
+            if segment is not None:
+                meta["segment"] = segment
+            self.append("meta", meta)
 
     def _truncate_to_intact_prefix(self) -> None:
         """Cut the file back to the end of its last whole, parseable line
@@ -137,13 +144,35 @@ class Journal:
                 fh.truncate(good)
 
     # -- write path ---------------------------------------------------------
-    def append(self, kind: str, data: dict) -> int:
-        """Append one typed record; returns its global sequence number."""
+    def reserve(self, n: int) -> int:
+        """Claim ``n`` consecutive sequence numbers without writing records;
+        returns the first. A parent journal reserves a window per remote
+        firing and ships it with the work order — the zone runner writes the
+        records (with those seqs) into its own *segment* file, and the
+        merge re-establishes the total order. Gaps from failed/retried
+        remote work are harmless: replay orders by seq, it never requires
+        density."""
         with self._lock:
             if self.closed:
                 raise ValueError(f"journal {self.path} is closed")
-            seq = self._next_seq
-            self._next_seq += 1
+            start = self._next_seq
+            self._next_seq += max(0, int(n))
+            return start
+
+    def append(self, kind: str, data: dict, seq: Optional[int] = None) -> int:
+        """Append one typed record; returns its global sequence number.
+
+        ``seq`` overrides the auto-assigned number — segment journals write
+        records under sequence numbers their parent reserved, so the merged
+        stream stays a total order across processes."""
+        with self._lock:
+            if self.closed:
+                raise ValueError(f"journal {self.path} is closed")
+            if seq is None:
+                seq = self._next_seq
+                self._next_seq += 1
+            else:
+                self._next_seq = max(self._next_seq, seq + 1)
             line = json.dumps(
                 {"seq": seq, "kind": kind, "data": data},
                 default=repr,
@@ -262,6 +291,56 @@ class ReplayedJournal:
         )
 
 
+def merge_segments(path: str, segment_paths: Iterable[str]) -> tuple:
+    """Fold one or more runner *segment* files back into the main journal's
+    record stream, ordered by the global ``seq`` protocol.
+
+    Each zone runner wrote its records under sequence numbers the parent
+    reserved from one shared counter, so sorting the union by ``seq``
+    reconstructs the exact total order a single-process run would have
+    journaled. Segment ``meta`` headers are per-file bookkeeping (their
+    seq 0 would collide with the main header) and are dropped. A torn tail
+    in any file — main or segment — is tolerated per-file, exactly like
+    :func:`read_records` on a single journal.
+
+    ``revoked`` records in the *main* journal void a seq window: a runner
+    that died mid-flight may have appended records for a firing the parent
+    then retried under fresh seqs, and replaying both copies would
+    duplicate AVs. Segment records whose seq falls in a revoked window are
+    dropped (the revocation marker itself carries no registry state).
+
+    Returns ``(records, truncated)`` where ``truncated`` sums the dropped
+    torn lines across all files.
+    """
+    records, truncated = read_records(path)
+    revoked: set = set()
+    for r in records:
+        if r.get("kind") == "revoked":
+            d = r.get("data") or {}
+            start = int(d.get("start", 0))
+            revoked.update(range(start, start + int(d.get("count", 0))))
+    for seg in segment_paths:
+        seg_records, seg_truncated = read_records(seg)
+        truncated += seg_truncated
+        records.extend(
+            r
+            for r in seg_records
+            if r.get("kind") != "meta" and int(r.get("seq", -1)) not in revoked
+        )
+    records.sort(key=lambda r: int(r.get("seq", -1)))
+    return records, truncated
+
+
+def replay_segments(path: str, segment_paths: Iterable[str]) -> ReplayedJournal:
+    """Rebuild provenance state from a main journal plus its runner
+    segments: :func:`merge_segments` then the same record application as
+    :func:`replay_journal`. The result's ``lineage`` / ``visits_of`` /
+    ledger answers match the live multi-process registry — and the
+    single-process oracle."""
+    records, truncated = merge_segments(path, segment_paths)
+    return _apply_records(records, truncated)
+
+
 def replay_journal(path: str) -> ReplayedJournal:
     """Rebuild provenance state from a journal file.
 
@@ -273,9 +352,13 @@ def replay_journal(path: str) -> ReplayedJournal:
     have. The replayed objects carry **no** journal binding: rehydration
     never re-journals history.
     """
+    records, truncated = read_records(path)
+    return _apply_records(records, truncated)
+
+
+def _apply_records(records: list, truncated: int) -> ReplayedJournal:
     from repro.core.provenance import ProvenanceRegistry
 
-    records, truncated = read_records(path)
     registry = ProvenanceRegistry()
     ledger = topology = None
     workspace = ""

@@ -21,6 +21,7 @@ for free). See docs/extended-cloud.md for the runnable walkthrough.
 """
 
 from .ledger import TransferLedger
+from .partition import ZonePartition, extract_partitions
 from .placement import (
     DataGravityPlacement,
     PinPlacement,
@@ -42,4 +43,5 @@ __all__ = [
     "TransferLedger",
     "PlacementPolicy", "PinPlacement", "DataGravityPlacement",
     "make_placement",
+    "ZonePartition", "extract_partitions",
 ]

@@ -245,24 +245,55 @@ class ZonedExecutor(InlineExecutor):
         return f"ZonedExecutor({inner})"
 
 
+EXECUTOR_CHOICES = (
+    "inline",
+    "concurrent",
+    "zoned",
+    "zoned-concurrent",
+    "process",
+    "zoned-process",
+)
+
+
+def _env_max_workers() -> int:
+    raw = os.environ.get("KOALJA_MAX_WORKERS", "8").strip()
+    try:
+        workers = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"KOALJA_MAX_WORKERS={raw!r} is not an integer (pool size, >= 1)"
+        ) from None
+    if workers < 1:
+        raise ValueError(f"KOALJA_MAX_WORKERS={workers} must be >= 1")
+    return workers
+
+
 def default_executor() -> InlineExecutor:
-    """Backend selected by the ``KOALJA_EXECUTOR`` env var (``inline`` |
-    ``concurrent``); ``KOALJA_MAX_WORKERS`` sizes the pool. Lets CI smoke
-    the threaded path across the whole suite without code changes."""
+    """Backend selected by the ``KOALJA_EXECUTOR`` env var (one of
+    ``inline | concurrent | zoned | zoned-concurrent | process |
+    zoned-process``); ``KOALJA_MAX_WORKERS`` sizes thread and process
+    pools. Lets CI smoke every execution substrate across the whole suite
+    without code changes."""
     name = os.environ.get("KOALJA_EXECUTOR", "inline").strip().lower()
     if name in ("concurrent", "threads", "threadpool"):
-        workers = int(os.environ.get("KOALJA_MAX_WORKERS", "8"))
-        return ConcurrentExecutor(max_workers=workers)
+        return ConcurrentExecutor(max_workers=_env_max_workers())
     if name in ("zoned",):
         return ZonedExecutor()
     if name in ("zoned-concurrent", "zoned_concurrent"):
-        workers = int(os.environ.get("KOALJA_MAX_WORKERS", "8"))
-        return ZonedExecutor(inner=ConcurrentExecutor(max_workers=workers))
+        return ZonedExecutor(inner=ConcurrentExecutor(max_workers=_env_max_workers()))
+    if name in ("process", "process-pool", "process_pool"):
+        from repro.runtime import ProcessExecutor
+
+        return ProcessExecutor(max_workers=_env_max_workers())
+    if name in ("zoned-process", "zoned_process"):
+        from repro.runtime import ZonedProcessExecutor
+
+        return ZonedProcessExecutor(max_workers=_env_max_workers())
     if name in ("", "inline"):
         return InlineExecutor()
     raise ValueError(
         f"KOALJA_EXECUTOR={name!r} is not a known backend "
-        f"(inline | concurrent | zoned | zoned-concurrent)"
+        f"(choose from {' | '.join(EXECUTOR_CHOICES)})"
     )
 
 

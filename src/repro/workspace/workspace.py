@@ -171,6 +171,20 @@ class Workspace:
             if placement is not None
             else (os.environ.get("KOALJA_PLACEMENT", "").strip().lower() or None)
         )
+        # Validate the policy *name* now, at construction — not lazily at
+        # first build (and never at all on flat circuits, where a typo'd
+        # KOALJA_PLACEMENT used to be silently ignored).
+        if isinstance(self._placement, str):
+            from repro.topology.placement import _POLICIES
+
+            if self._placement not in _POLICIES:
+                source = (
+                    "placement=" if placement is not None else "KOALJA_PLACEMENT="
+                )
+                raise ValueError(
+                    f"{source}{self._placement!r} is not a known placement "
+                    f"policy (choose from {' | '.join(sorted(_POLICIES))})"
+                )
         self._store = store or ArtifactStore()
         self._registry = registry or ProvenanceRegistry()
         # cache=None -> default MemoCache; cache=False -> caching disabled
@@ -215,20 +229,30 @@ class Workspace:
         )
 
     @classmethod
-    def from_journal(cls, path: str, **ws_kwargs: Any) -> "Workspace":
+    def from_journal(cls, path, **ws_kwargs: Any) -> "Workspace":
         """Rehydrate the forensic stories from a provenance journal written
         by a previous (possibly crashed) process.
+
+        ``path`` is a journal file — or, for a multi-process run under
+        :class:`~repro.runtime.ZonedProcessExecutor`, a list/tuple of
+        ``[main_journal, *runner_segments]``: the segments merge back into
+        one seq-ordered stream before replay
+        (:func:`repro.provenance.replay_segments`).
 
         The returned workspace holds a replayed registry — ``lineage()``,
         ``visitor_log()``, ``design_map()``, ``visits_of`` and, when the run
         had a topology, ``stats()["topology"]["ledger"]`` answer exactly as
         the writing process would have (a torn final line from a mid-write
-        crash is detected and dropped). It is a forensic view, not a
-        runnable circuit: the journal records events, not user code, so
-        declare tasks on a fresh Workspace to compute again."""
-        from repro.provenance import replay_journal
+        crash is detected and dropped, per file). It is a forensic view,
+        not a runnable circuit: the journal records events, not user code,
+        so declare tasks on a fresh Workspace to compute again."""
+        from repro.provenance import replay_journal, replay_segments
 
-        replayed = replay_journal(path)
+        if isinstance(path, (list, tuple)):
+            main, *segments = path
+            replayed = replay_segments(main, segments)
+        else:
+            replayed = replay_journal(path)
         ws = cls(
             name=replayed.workspace or "rehydrated",
             registry=replayed.registry,

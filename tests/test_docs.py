@@ -54,3 +54,11 @@ def test_journal_walkthrough_registered_and_executes():
     assert "docs/journal.md" in (REPO / "README.md").read_text()
     n = mod.run_walkthrough("docs/journal.md")
     assert n >= 4, "journal walkthrough lost its code blocks"
+
+
+def test_runtime_walkthrough_registered_and_executes():
+    mod = _load_check_docs()
+    assert "docs/runtime.md" in mod.WALKTHROUGHS
+    assert "docs/runtime.md" in (REPO / "README.md").read_text()
+    n = mod.run_walkthrough("docs/runtime.md")
+    assert n >= 5, "runtime walkthrough lost its code blocks"

@@ -355,16 +355,23 @@ def _fingerprint(ws):
 class TestExecutorDeterminism:
     @pytest.mark.parametrize("placement", ["pin", "data_gravity"])
     def test_identical_across_backends(self, placement):
+        from repro.runtime import ProcessExecutor, ZonedProcessExecutor
+
         backends = [
             InlineExecutor(),
             ConcurrentExecutor(max_workers=4),
             ZonedExecutor(),
             ZonedExecutor(inner=ConcurrentExecutor(max_workers=4)),
+            ProcessExecutor(max_workers=4),
+            ZonedProcessExecutor(max_workers=4),
         ]
-        prints = [
-            _fingerprint(_drive(_iot_ws(placement, executor=ex), rounds=2))
-            for ex in backends
-        ]
+        prints = []
+        for ex in backends:
+            prints.append(
+                _fingerprint(_drive(_iot_ws(placement, executor=ex), rounds=2))
+            )
+            if hasattr(ex, "shutdown"):
+                ex.shutdown()
         for other in prints[1:]:
             assert other == prints[0]
 

@@ -27,6 +27,7 @@ WALKTHROUGHS = (
     "docs/scheduler.md",
     "docs/extended-cloud.md",
     "docs/journal.md",
+    "docs/runtime.md",
 )
 
 # [text](target) — markdown links, excluding images handled identically
