@@ -612,6 +612,93 @@ def bench_process_pool(width: int = 8, gil_ms: float = 30.0, pushes: int = 3):
     }
 
 
+def bench_journal_compaction(rounds: int = 8, pushes_per_round: int = 40):
+    """ISSUE 7 acceptance: journal at production scale. A long-running
+    streaming workload (fresh content every push, so every firing executes
+    and journals) rotates its journal and compacts each round, retiring
+    AVs whose payloads the store evicted. Three claims are priced:
+
+    - restart cost: rehydrating via checkpoint + tail must be >= 10x
+      faster than replaying the full record history (the uncompacted
+      oracle over the archived segments),
+    - boundedness: on-disk journal bytes must not grow monotonically
+      across rounds (steady state, not O(lifetime)),
+    - fidelity: the checkpointed replay's registry fingerprint must be
+      byte-identical to the uncompacted oracle's.
+    """
+    import json
+    import os
+    import tempfile
+
+    from repro.provenance import discover_chain, replay_files, replay_journal
+
+    root = tempfile.mkdtemp(prefix="koalja-bench-")
+    base = os.path.join(root, "compact.jsonl")
+    archive = os.path.join(root, "archive")
+    ws = Workspace(
+        "bench-compaction", journal_path=base, topology=False, cache=False,
+        journal_rotate_records=256,
+    )
+    a = ws.task(lambda x: {"y": x * 2.0}, name="a", inputs=["x"], outputs=["y"])
+    b = ws.task(lambda y: {"z": float(y.sum())}, name="b", inputs=["y"], outputs=["z"])
+    a["y"] >> b["y"]
+
+    bytes_per_round = []
+    keep = 4  # live working set: everything older is evicted + retired
+    for r in range(rounds):
+        for i in range(pushes_per_round):
+            ws.push(a, x=np.full(64, float(r * pushes_per_round + i), np.float32))
+        for uid in ws.registry.all_avs()[:-keep]:
+            av = ws.registry.get_av(uid)
+            if not av.uri.startswith("ghost://"):
+                ws.store.evict_local(av.uri)
+        ws.compact_journal(retire_evicted=True, archive_dir=archive)
+        bytes_per_round.append(ws.journal.stats()["bytes_on_disk"])
+    ws.journal.flush()
+    js = ws.journal.stats()
+
+    oracle_files = sorted(
+        os.path.join(archive, n) for n in os.listdir(archive)
+    ) + discover_chain(base)["segments"] + [base]
+
+    t0 = time.perf_counter()
+    oracle = replay_files(oracle_files)
+    wall_full = time.perf_counter() - t0
+    wall_ckpt = min(
+        _timed(lambda: replay_journal(base))[1] for _ in range(3)
+    )
+    restored = replay_journal(base)
+
+    def fingerprint(registry):
+        state = registry.snapshot_state()
+        state.pop("next_seq", None)
+        state["avs"] = sorted(state["avs"], key=lambda x: x["av"]["uid"])
+        return json.dumps(state, sort_keys=True, default=repr)
+
+    steady = bytes_per_round[len(bytes_per_round) // 2:]
+    return {
+        "rounds": rounds,
+        "pushes_per_round": pushes_per_round,
+        "records_full_history": oracle.records,
+        "records_checkpoint_replay": restored.records,
+        "records_compacted": js["records_compacted"],
+        "bytes_reclaimed": js["bytes_reclaimed"],
+        "bytes_on_disk_per_round": bytes_per_round,
+        "bytes_bounded": max(steady) <= 2 * bytes_per_round[0],
+        "wall_full_replay_s": wall_full,
+        "wall_checkpoint_replay_s": wall_ckpt,
+        "restart_speedup_x": wall_full / max(wall_ckpt, 1e-9),
+        "fingerprint_identical": fingerprint(restored.registry)
+        == fingerprint(oracle.registry),
+    }
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
 ALL = {
     "B1_metadata_overhead": bench_metadata_overhead,
     "B2_cache_reuse": bench_cache_reuse,
@@ -624,4 +711,5 @@ ALL = {
     "B10_edge_placement": bench_edge_placement,
     "B11_journal_overhead": bench_journal_overhead,
     "B12_process_pool": bench_process_pool,
+    "B13_journal_compaction": bench_journal_compaction,
 }

@@ -69,6 +69,12 @@ _HEADLINES = {
         "overhead_x",
         "replay_identical",
     ],
+    "B13_journal_compaction": [
+        "restart_speedup_x",
+        "bytes_bounded",
+        "fingerprint_identical",
+        "records_compacted",
+    ],
     "B10_edge_placement": [
         "bytes_reduction_x",
         "bytes_crosszone_all_to_cloud",

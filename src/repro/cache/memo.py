@@ -138,6 +138,50 @@ class MemoCache:
         expiry = (time.time() + ttl) if ttl is not None else None
         with self._lock:
             self._entries[key] = (value, expiry)
+            if self._journal is not None:
+                # typed ``memo`` record: the table itself survives restarts
+                # (re-inserting under the same key supersedes the old record
+                # on replay — exactly the last-writer-wins the dict applies
+                # here — which is what lets compaction fold overwrites away)
+                self._journal.append(
+                    "memo", {"key": key, "record": value, "expires_at": expiry}
+                )
+
+    # -- replay / checkpoint (journal rehydration + compaction support) ------
+    def restore_entry(
+        self, key: str, record: Any, expires_at: Optional[float] = None
+    ) -> None:
+        """Rebuild one memo entry from a journaled ``memo`` record without
+        re-journaling; last record per key wins, matching live overwrite
+        semantics."""
+        with self._lock:
+            self._entries[key] = (record, expires_at)
+
+    def snapshot_state(self) -> dict:
+        """Serialize the live (non-expired) memo table as the ``cache``
+        payload of a journal checkpoint — expired entries are the memo
+        layer's superseded records and are purged at the fold."""
+        now = time.time()
+        with self._lock:
+            return {
+                "entries": [
+                    {"key": k, "record": v, "expires_at": e}
+                    for k, (v, e) in self._entries.items()
+                    if e is None or now <= e
+                ]
+            }
+
+    def restore_state(self, state: dict) -> None:
+        """Rehydrate from a checkpoint snapshot (inverse of
+        :meth:`snapshot_state`); tail ``memo`` records replayed afterwards
+        overwrite on top."""
+        with self._lock:
+            self._entries.clear()
+            for item in state.get("entries", []):
+                self._entries[item["key"]] = (
+                    item.get("record"),
+                    item.get("expires_at"),
+                )
 
     def credit_hit(self, record: Any) -> int:
         """Account one short-circuited execution; returns bytes saved."""

@@ -220,6 +220,127 @@ class ProvenanceRegistry:
         with self._lock:
             self.anomalies.append(dict(data))
 
+    # -- forensic horizon (journal compaction support) -----------------------
+    def _apply_retirement(self, gone: set, horizon: int) -> None:
+        """The shared removal rule for live retirement and journal replay:
+        drop the retired AVs, their lineage rows, every visitor entry that
+        references them, and the AV-less ``executed`` markers (one per task
+        firing, ``av_uid == '-'``) at or below the horizon seq — a firing
+        whose artifacts are all retired has nothing left to anchor its
+        marker to. Anomaly lines are never trimmed (they are design-map
+        content, deliberately permanent)."""
+        for uid in gone:
+            self._avs.pop(uid, None)
+            self._lineage.pop(uid, None)
+        for task in list(self._visitor_logs):
+            kept = [
+                e
+                for e in self._visitor_logs[task]
+                if e.av_uid not in gone
+                and not (
+                    e.av_uid == "-" and e.event == "executed" and e.seq <= horizon
+                )
+            ]
+            if kept:
+                self._visitor_logs[task][:] = kept
+            else:
+                del self._visitor_logs[task]
+
+    def retire_avs(self, uids: Iterable[str], note: str = "") -> list:
+        """Drop AVs — and the visitor-log entries that reference them — from
+        the registry's forensic horizon, journaling one ``retired`` record so
+        every view of history agrees: the live registry, a full-history
+        replay (which applies the marker), and a compacted replay (whose
+        checkpoint simply no longer contains them).
+
+        This is the deliberate forgetting that makes
+        :meth:`~repro.provenance.Journal.compact` *bound* state rather than
+        merely re-encode it: dropped travellers, store-evicted payloads, and
+        aged-out ``[N/k]`` window members stop costing memory and checkpoint
+        bytes. Lineage pointers from surviving AVs to retired parents go
+        dangling, which ``lineage()`` already tolerates (it skips unknown
+        uids). Returns the uids actually retired."""
+        with self._lock:
+            doomed = [u for u in uids if u in self._avs]
+            if not doomed:
+                return []
+            gone = set(doomed)
+            # horizon for AV-less `executed` markers: the newest visit being
+            # retired — markers older than that belong to folded firings
+            horizon = max(
+                (
+                    e.seq
+                    for es in self._visitor_logs.values()
+                    for e in es
+                    if e.av_uid in gone
+                ),
+                default=-1,
+            )
+            self._apply_retirement(gone, horizon)
+            if self._journal is not None:
+                self._journal.append(
+                    "retired",
+                    {"uids": sorted(doomed), "horizon_seq": horizon, "note": note},
+                )
+            return sorted(doomed)
+
+    def restore_retired(self, data: dict) -> None:
+        """Apply a journaled ``retired`` marker during replay: the same
+        removals the live registry performed, without re-journaling."""
+        with self._lock:
+            self._apply_retirement(
+                set(data.get("uids", [])), int(data.get("horizon_seq", -1))
+            )
+
+    # -- checkpoint snapshot (journal compaction support) --------------------
+    def snapshot_state(self) -> dict:
+        """Serialize the whole registry as one JSON-safe state blob — the
+        ``registry`` payload of a journal checkpoint record. Everything a
+        replay of the folded records would have produced is here: AVs with
+        lineage (insertion order preserved), visitor entries (sorted by
+        their total-order seq), promises, edges, anomalies, and the event
+        counter."""
+        with self._lock:
+            visits = sorted(
+                (e for es in self._visitor_logs.values() for e in es),
+                key=lambda e: e.seq,
+            )
+            return {
+                "avs": [
+                    {"av": av.to_record(), "parents": list(self._lineage.get(uid, []))}
+                    for uid, av in self._avs.items()
+                ],
+                "visits": [e.to_record() for e in visits],
+                "tasks": {t: dict(p) for t, p in self._task_promises.items()},
+                "edges": sorted(list(e) for e in self._design_edges),
+                "anomalies": [dict(a) for a in self.anomalies],
+                "next_seq": self._next_seq,
+            }
+
+    def restore_state(self, state: dict) -> None:
+        """Rehydrate from a checkpoint snapshot (inverse of
+        :meth:`snapshot_state`), replacing current contents. Tail records
+        replayed afterwards append on top, exactly as the folded records
+        would have."""
+        with self._lock:
+            self._avs.clear()
+            self._lineage.clear()
+            self._visitor_logs.clear()
+            self._task_promises.clear()
+            self._design_edges.clear()
+            self.anomalies.clear()
+            for item in state.get("avs", []):
+                self.restore_av(item)
+            for v in state.get("visits", []):
+                self.restore_visit(v)
+            for t, p in (state.get("tasks") or {}).items():
+                self._task_promises[t] = dict(p)
+            for e in state.get("edges", []):
+                self._design_edges.add(tuple(e))
+            for a in state.get("anomalies", []):
+                self.anomalies.append(dict(a))
+            self._next_seq = max(self._next_seq, int(state.get("next_seq", 0)))
+
     # -- story 1: traveller log ----------------------------------------------
     def traveller_log(self, av_uid: str) -> list:
         """Full journey of one artifact: every stamp, in order."""

@@ -2,8 +2,10 @@
 
 The in-memory registry lives in :mod:`repro.core.provenance` (it is part of
 the engine); this package holds what makes it *survive the process*: the
-append-only :class:`Journal`, the crash-tolerant reader, and the
-:func:`replay_journal` rehydrator behind ``Workspace.from_journal``.
+append-only :class:`Journal` (with segment rotation and checkpoint
+compaction, so replay cost tracks live state rather than history), the
+crash-tolerant readers, and the :func:`replay_journal` rehydrator behind
+``Workspace.from_journal``.
 """
 
 from .journal import (
@@ -11,8 +13,11 @@ from .journal import (
     Journal,
     JournalCorruptError,
     ReplayedJournal,
+    discover_chain,
     merge_segments,
+    read_chain,
     read_records,
+    replay_files,
     replay_journal,
     replay_segments,
 )
@@ -22,8 +27,11 @@ __all__ = [
     "Journal",
     "JournalCorruptError",
     "ReplayedJournal",
+    "discover_chain",
     "merge_segments",
+    "read_chain",
     "read_records",
+    "replay_files",
     "replay_journal",
     "replay_segments",
 ]

@@ -18,7 +18,11 @@ journal *segment* file (``<journal>.seg-<zone>``) and streams them back;
 the parent restores them verbatim (``restore_av`` / ``restore_visit``,
 which never re-journal). :func:`repro.provenance.replay_segments` later
 merges main + segments by seq into a registry identical to the live one —
-and to the single-process oracle.
+and to the single-process oracle. The merge is chain-aware on both sides:
+a rotated main journal (numbered segments + live tail + best checkpoint)
+and rotated zone segments replay the same stream, and zone records already
+folded into a main checkpoint by ``Journal.compact`` are dropped as
+covered.
 
 Crash story: a runner killed mid-flight may have already appended records
 for firings the parent will retry under *fresh* reservations. The parent
@@ -164,13 +168,22 @@ class ZonedProcessExecutor(InlineExecutor):
         return False
 
     def segment_paths(self) -> list:
-        """Every segment file the runner fleet has written (for
-        ``replay_segments`` / ``Workspace.from_journal([main, *segments])``)."""
+        """Every segment *base* path the runner fleet has written (for
+        ``replay_segments`` / ``Workspace.from_journal([main, *segments])``
+        / ``Journal.compact``). Base paths, not files: a long-lived zone
+        segment rotates under ``KOALJA_JOURNAL_ROTATE`` just like the main
+        journal, and the chain-aware readers expand each base into its
+        rotated parts + live tail."""
+        from repro.provenance import discover_chain
+
         out = []
         if self._manager is not None and self._manager.journal is not None:
             for zone in sorted(self.partitions):
                 path = self._segment_path(self._manager.journal, zone)
-                if path and os.path.exists(path):
+                if path is None:
+                    continue
+                chain = discover_chain(path)
+                if chain["live"] or chain["segments"]:
                     out.append(path)
         return out
 

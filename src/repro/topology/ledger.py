@@ -99,6 +99,41 @@ class TransferLedger:
             self.crosszone_transfers += 1
             return True
 
+    # -- checkpoint snapshot (journal compaction support) --------------------
+    def snapshot_state(self) -> dict:
+        """Serialize the ledger as the ``ledger`` payload of a journal
+        checkpoint: residency set, per-pair byte totals, counters. This is
+        the big fold win — thousands of per-materialization ``ledger``
+        records collapse to one bounded blob, and energy stays *derived*
+        (priced from the restored pair totals at read time)."""
+        with self._lock:
+            return {
+                "resident": sorted(list(p) for p in self._resident),
+                "pair_bytes": [
+                    [s, d, n] for (s, d), n in sorted(self._pair_bytes.items())
+                ],
+                "bytes_moved_crosszone": self.bytes_moved_crosszone,
+                "bytes_not_moved_crosszone": self.bytes_not_moved_crosszone,
+                "crosszone_transfers": self.crosszone_transfers,
+                "local_handovers": self.local_handovers,
+            }
+
+    def restore_state(self, state: dict) -> None:
+        """Rehydrate from a checkpoint snapshot (inverse of
+        :meth:`snapshot_state`); tail ``ledger`` records replayed afterwards
+        charge on top of the restored totals."""
+        with self._lock:
+            self._resident = {tuple(p) for p in state.get("resident", [])}
+            self._pair_bytes = {
+                (s, d): int(n) for s, d, n in state.get("pair_bytes", [])
+            }
+            self.bytes_moved_crosszone = int(state.get("bytes_moved_crosszone", 0))
+            self.bytes_not_moved_crosszone = int(
+                state.get("bytes_not_moved_crosszone", 0)
+            )
+            self.crosszone_transfers = int(state.get("crosszone_transfers", 0))
+            self.local_handovers = int(state.get("local_handovers", 0))
+
     @property
     def transfer_energy_j(self) -> float:
         """Energy priced from per-pair byte totals — order-independent, so

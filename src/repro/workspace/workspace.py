@@ -153,6 +153,8 @@ class Workspace:
         placement=None,
         journal_path: Union[str, bool, None] = None,
         journal_flush_every_n: Optional[int] = None,
+        journal_rotate_bytes: Optional[int] = None,
+        journal_rotate_records: Optional[int] = None,
     ) -> None:
         self.name = name
         # executor=None defers to KOALJA_EXECUTOR (inline | concurrent) so
@@ -193,7 +195,12 @@ class Workspace:
         # file under the system tempdir; any other non-empty value -> a
         # directory to create per-workspace journals in); journal_path=False
         # forces the journal off regardless of env.
-        self._journal = self._make_journal(journal_path, journal_flush_every_n)
+        self._journal = self._make_journal(
+            journal_path,
+            journal_flush_every_n,
+            journal_rotate_bytes,
+            journal_rotate_records,
+        )
         self._replay = None  # set by from_journal (rehydrated workspaces)
         self._max_rounds = max_rounds
         self._decls: dict = {}
@@ -203,7 +210,9 @@ class Workspace:
         self._manager: Optional[PipelineManager] = None
         self._watchers: list = []
 
-    def _make_journal(self, journal_path, flush_every_n):
+    def _make_journal(
+        self, journal_path, flush_every_n, rotate_bytes=None, rotate_records=None
+    ):
         if journal_path is False:
             return None
         if journal_path is None:
@@ -225,7 +234,11 @@ class Workspace:
         from repro.provenance import Journal
 
         return Journal(
-            journal_path, flush_every_n=flush_every_n, workspace=self.name
+            journal_path,
+            flush_every_n=flush_every_n,
+            workspace=self.name,
+            rotate_bytes=rotate_bytes,
+            rotate_records=rotate_records,
         )
 
     @classmethod
@@ -233,8 +246,13 @@ class Workspace:
         """Rehydrate the forensic stories from a provenance journal written
         by a previous (possibly crashed) process.
 
-        ``path`` is a journal file — or, for a multi-process run under
-        :class:`~repro.runtime.ZonedProcessExecutor`, a list/tuple of
+        ``path`` is a journal *base* path — the whole segment chain is
+        discovered from it: rotated segments (``<path>.000N``), the best
+        checkpoint snapshot (``<path>.ckpt-*``, if the journal was
+        compacted), and the live tail replay as one seq-ordered stream, so
+        restart cost after compaction is checkpoint + tail rather than full
+        history. For a multi-process run under
+        :class:`~repro.runtime.ZonedProcessExecutor`, pass a list/tuple of
         ``[main_journal, *runner_segments]``: the segments merge back into
         one seq-ordered stream before replay
         (:func:`repro.provenance.replay_segments`).
@@ -610,6 +628,57 @@ class Workspace:
         """The durable provenance journal (None when journaling is off)."""
         return self._journal
 
+    def compact_journal(
+        self,
+        *,
+        retire_evicted: bool = False,
+        archive_dir: Optional[str] = None,
+    ) -> dict:
+        """Fold the journal's rotated history into a checkpoint snapshot
+        (:meth:`repro.provenance.Journal.compact`), so the next
+        ``from_journal`` replays checkpoint + tail instead of full history.
+
+        ``retire_evicted=True`` first trims the forensic horizon: AVs whose
+        payloads the store can no longer resolve (evicted local-only
+        artifacts) and AVs stamped ``dropped`` (streaming-window members the
+        merge policy aged out) are retired from the registry — journaled as
+        a ``retired`` record, so replays agree — before the fold. That is
+        what keeps checkpoint size proportional to *live* state on an
+        unbounded stream; the default keeps the drop-forensics story intact
+        (dropped travellers stay queryable forever).
+
+        Per-zone runner segment files (multi-process runs) are folded in
+        automatically; call between drains, not mid-flight. ``archive_dir``
+        moves folded segments aside instead of deleting them — the
+        cold-tier hook, and the uncompacted oracle for audits
+        (:func:`repro.provenance.replay_files`). Returns the compaction
+        report."""
+        if self._journal is None:
+            raise ValueError(
+                f"workspace {self.name!r} has no journal to compact "
+                "(enable with journal_path= or KOALJA_JOURNAL=1)"
+            )
+        if retire_evicted:
+            doomed = []
+            for uid in self._registry.all_avs():
+                av = self._registry.get_av(uid)
+                if any(s.event == "dropped" for s in av.travel_document):
+                    doomed.append(uid)
+                elif not av.uri.startswith("ghost://") and not self._store.resolvable(
+                    av.uri
+                ):
+                    doomed.append(uid)
+            if doomed:
+                self._registry.retire_avs(
+                    doomed, note="compaction horizon: evicted/dropped payloads"
+                )
+        self._journal.flush()
+        seg_fn = getattr(self.executor, "segment_paths", None)
+        segments = seg_fn() if seg_fn is not None else ()
+        return self._journal.compact(
+            segment_paths=segments, archive_dir=archive_dir
+        )
+
     def value_of(self, av: AnnotatedValue) -> Any:
         return self._store.get(av.uri)
 
@@ -659,6 +728,12 @@ class Workspace:
                 "replayed_records": self._replay.records,
                 "truncated_lines": self._replay.truncated,
                 "replayed_counts": dict(self._replay.counts),
+                # segment-chain shape of the replayed journal: how many
+                # files held the history and how much of it compaction had
+                # already folded into checkpoints before this replay
+                "segments": self._replay.segments,
+                "checkpoints": self._replay.checkpoints,
+                "records_compacted": self._replay.records_compacted,
             }
             if self._replay.ledger is not None:
                 # the replayed transfer ledger answers where the engine's

@@ -14,6 +14,7 @@ from repro.core.provenance import ProvenanceRegistry
 from repro.provenance import (
     Journal,
     JournalCorruptError,
+    read_chain,
     read_records,
     replay_journal,
 )
@@ -150,7 +151,7 @@ class TestWriteThrough:
         ws.push(norm, x=x)  # memo hits
         ws.registry.record_anomaly("score", "drift detected")
         ws.journal.flush()
-        kinds = [r["kind"] for r in read_records(ws.journal.path)[0]]
+        kinds = [r["kind"] for r in read_chain(ws.journal.path)[0]]
         for kind in ("meta", "task", "edge", "av", "visit", "cache_hit", "anomaly"):
             assert kind in kinds, f"missing journal record kind {kind!r}"
 
@@ -160,7 +161,7 @@ class TestWriteThrough:
         )
         ws.push(norm, x=np.arange(8.0))
         ws.journal.flush()
-        records = read_records(ws.journal.path)[0]
+        records = read_chain(ws.journal.path)[0]
         kinds = [r["kind"] for r in records]
         assert "topology" in kinds and "ledger" in kinds
         spec = next(r["data"] for r in records if r["kind"] == "topology")
@@ -451,7 +452,7 @@ class TestConcurrentReads:
         for _ in range(5):
             ws.sample(cam)
         ws.journal.flush()
-        records, truncated = read_records(ws.journal.path)
+        records, truncated, _info = read_chain(ws.journal.path)
         assert truncated == 0
         seqs = [r["seq"] for r in records]
         assert seqs == list(range(len(seqs)))  # gapless total order
