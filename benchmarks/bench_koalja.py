@@ -503,13 +503,16 @@ def bench_journal_overhead(pushes: int = 200):
             ws.push(a, x=np.full(64, float(i), np.float32))
         return time.perf_counter() - t0
 
-    ws_mem, a_mem = build(False)
-    wall_memory = drive(ws_mem, a_mem)
+    # best-of-3 per leg: the rate folds in full engine wall time, and a
+    # single pass is hostage to scheduler/fsync jitter on a loaded host
+    wall_memory = min(drive(*build(False)) for _ in range(3))
 
-    path = os.path.join(tempfile.mkdtemp(prefix="koalja-bench-"), "bench.jsonl")
-    ws_j, a_j = build(path)
-    wall_journal = drive(ws_j, a_j)
-    ws_j.journal.close()
+    wall_journal = float("inf")
+    for _ in range(3):
+        path = os.path.join(tempfile.mkdtemp(prefix="koalja-bench-"), "bench.jsonl")
+        ws_j, a_j = build(path)
+        wall_journal = min(wall_journal, drive(ws_j, a_j))
+        ws_j.journal.close()
     js = ws_j.journal.stats()
     replayed = replay_journal(path)
 
@@ -693,6 +696,138 @@ def bench_journal_compaction(rounds: int = 8, pushes_per_round: int = 40):
     }
 
 
+def bench_hotpath_throughput(wave_width: int = 64, journal_records: int = 4000):
+    """ISSUE 8: the vectorized data plane, leg by leg.
+
+    - ``hash``: a 64-wide wave of >4 MiB arrays digested by
+      ``content_hash_batch`` (blockwise tree digest on the large tier) vs
+      the per-AV scalar baseline — full-coverage sha256 per payload, the
+      cost the old sampled-stripe hash was dodging by under-reading.
+    - ``journal``: one ``append_batch`` (fused encode, one lock, one write
+      decision) vs per-record ``append`` for the same record stream.
+    - ``coalesce``: arrivals/s through a 2-stage chain with
+      ``TaskHandle.coalesce`` on vs off (same outputs, fewer waves).
+    """
+    import hashlib
+    import os
+    import tempfile
+
+    from repro.core.hashing import content_hash_batch
+    from repro.provenance import Journal
+
+    # -- hash leg ----------------------------------------------------------
+    rng = np.random.RandomState(0)
+    nbytes = (1 << 22) + (1 << 19)  # 4.5 MiB: safely in the tree tier
+    wave = [
+        rng.randint(0, 255, size=nbytes, dtype=np.uint8) for _ in range(wave_width)
+    ]
+
+    def scalar_full_sha():  # the per-AV baseline: full-coverage sha256
+        return [
+            hashlib.sha256(
+                a.tobytes() + str(a.shape).encode() + str(a.dtype).encode()
+            ).hexdigest()[:16]
+            for a in wave
+        ]
+
+    scalar_full_sha()  # warm
+    content_hash_batch(wave)
+    # best-of-3 per leg: a single pass over a ~288 MiB working set is noisy
+    # under suite load, and the minimum is the honest cost of either path
+    wall_scalar = min(_timed(scalar_full_sha)[1] for _ in range(3))
+    wall_batch = min(_timed(lambda: content_hash_batch(wave))[1] for _ in range(3))
+    total_mb = wave_width * nbytes / 2**20
+
+    # -- journal leg -------------------------------------------------------
+    # Primary numbers use the *durable* configuration (flush_every_n=1, the
+    # zone-runner setting: a record is fsync-durable before the reply that
+    # references it leaves the process). There per-record append pays one
+    # fsync per record while append_batch makes one write/fsync decision per
+    # batch — the fusion the batch API exists for. The buffered default
+    # (flush_every_n=64) is reported alongside as the encode-dominated view.
+    records = [
+        (
+            "visit",
+            {
+                "task": "bench", "av_uid": f"av-{i:06d}", "event": "executed",
+                "timestamp": 1723100000.0 + i, "software_version": "v1",
+                "note": f"wall={i % 17}.000e-03s", "seq": i,
+            },
+        )
+        for i in range(journal_records)
+    ]
+    tmp = tempfile.mkdtemp(prefix="koalja-bench-hotpath-")
+
+    def journal_pair(tag, flush_every_n, n_records):
+        recs = records[:n_records]
+        j1 = Journal(
+            os.path.join(tmp, f"scalar-{tag}.jsonl"), flush_every_n=flush_every_n
+        )
+        def per_record():
+            for kind, data in recs:
+                j1.append(kind, data)
+        _, wall_scalar = _timed(per_record)
+        j1.close()
+        j2 = Journal(
+            os.path.join(tmp, f"batch-{tag}.jsonl"), flush_every_n=flush_every_n
+        )
+        _, wall_batch = _timed(lambda: j2.append_batch(recs))
+        j2.close()
+        return {
+            "records": n_records,
+            "scalar_records_per_s": n_records / max(wall_scalar, 1e-9),
+            "records_per_s": n_records / max(wall_batch, 1e-9),
+            "speedup_x": wall_scalar / max(wall_batch, 1e-9),
+        }
+
+    durable = journal_pair("durable", 1, min(journal_records, 1000))
+    buffered = journal_pair("buffered", None, journal_records)
+
+    # -- coalesce leg ------------------------------------------------------
+    def drive(coalesce):
+        ws = Workspace("bench-coalesce", topology=False, cache=False)
+        t = ws.task(
+            lambda x: {"y": x + 1.0}, name="inc", inputs=["x"], outputs=["y"]
+        )
+        d = ws.task(
+            lambda y: {"z": y * 2.0}, name="dbl", inputs=["y"], outputs=["z"]
+        )
+        t["y"] >> d["y"]
+        if coalesce:
+            t.coalesce(32)
+            d.coalesce(32)
+        n = 400
+        arrivals = [np.full(8, float(i), np.float32) for i in range(n)]
+        t0 = time.perf_counter()
+        for a in arrivals:
+            ws.inject(t, "x", a)
+        ws.manager.propagate()
+        wall = time.perf_counter() - t0
+        waves = ws.stats()["scheduler"]["waves"]
+        return n / wall, waves
+
+    aps_off, waves_off = drive(False)
+    aps_on, waves_on = drive(True)
+
+    return {
+        "hash": {
+            "wave_width": wave_width,
+            "mb_hashed": total_mb,
+            "scalar_mb_per_s": total_mb / max(wall_scalar, 1e-9),
+            "batched_mb_per_s": total_mb / max(wall_batch, 1e-9),
+            "speedup_x": wall_scalar / max(wall_batch, 1e-9),
+        },
+        "journal": {**durable, "buffered": buffered},
+        "coalesce": {
+            "arrivals_per_s": aps_on,
+            "arrivals_per_s_uncoalesced": aps_off,
+            "speedup_x": aps_on / max(aps_off, 1e-9),
+            "waves": waves_on,
+            "waves_uncoalesced": waves_off,
+        },
+    }
+
+
 def _timed(fn):
     t0 = time.perf_counter()
     out = fn()
@@ -712,4 +847,5 @@ ALL = {
     "B11_journal_overhead": bench_journal_overhead,
     "B12_process_pool": bench_process_pool,
     "B13_journal_compaction": bench_journal_compaction,
+    "B14_hotpath_throughput": bench_hotpath_throughput,
 }

@@ -8,6 +8,12 @@ throughput bench (B9), prints the results, and writes two artifacts:
     the headline numbers, committed so the perf trajectory is tracked PR
     over PR.
 
+Each bench executes in a **fresh interpreter** (hermetic mode, default):
+allocator, GC, and import state left behind by one bench must not skew the
+next one's timings — a heap warmed by B1-B13 makes B14's scalar-hash
+baseline measure ~1.7x faster than any real cold process would, for
+example. `KOALJA_BENCH_HERMETIC=0` restores the single-process run.
+
 The roofline tables are produced separately by
 `python -m repro.launch.dryrun --all` + `benchmarks.report` (they need the
 512-device env, which must not leak into this process).
@@ -17,7 +23,9 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 import sys
+import tempfile
 import time
 
 
@@ -84,6 +92,14 @@ _HEADLINES = {
         "provenance_events_identical",
         "zoned_ledger_identical",
     ],
+    "B14_hotpath_throughput": [
+        "hash.speedup_x",
+        "hash.batched_mb_per_s",
+        "journal.records_per_s",
+        "journal.speedup_x",
+        "coalesce.arrivals_per_s",
+        "coalesce.speedup_x",
+    ],
     "B12_process_pool": [
         "speedup",
         "payload_bytes_over_pipe",
@@ -120,20 +136,63 @@ def summarize(results: dict) -> dict:
     return summary
 
 
-def main():
+def _all_benches():
     from benchmarks.bench_koalja import ALL
 
-    results = {}
     benches = dict(ALL)
     benches["B9_pipeline_throughput"] = bench_pipeline_throughput
-    for name, fn in benches.items():
-        t0 = time.perf_counter()
-        try:
-            results[name] = {"result": fn(), "bench_wall_s": time.perf_counter() - t0}
-            status = "ok"
-        except Exception as e:  # pragma: no cover
-            results[name] = {"error": repr(e)}
-            status = "FAIL"
+    return benches
+
+
+def _run_entry(fn) -> dict:
+    t0 = time.perf_counter()
+    try:
+        return {"result": fn(), "bench_wall_s": time.perf_counter() - t0}
+    except Exception as e:  # pragma: no cover
+        return {"error": repr(e)}
+
+
+def _run_hermetic(name: str, repo_root: str) -> dict:
+    """One bench in a fresh interpreter (``--one`` child mode below)."""
+    fd, out_path = tempfile.mkstemp(suffix=".json", prefix="koalja-bench-")
+    os.close(fd)
+    env = dict(os.environ)
+    src = os.path.join(repo_root, "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (src, env.get("PYTHONPATH")) if p
+    )
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--one", name, "--out", out_path],
+            cwd=repo_root,
+            env=env,
+        )
+        if proc.returncode == 0 and os.path.getsize(out_path):
+            with open(out_path) as f:
+                return json.load(f)
+        return {"error": f"hermetic run exited {proc.returncode}"}
+    finally:
+        os.unlink(out_path)
+
+
+def main():
+    if "--one" in sys.argv:  # child mode: run one bench, dump JSON, exit
+        name = sys.argv[sys.argv.index("--one") + 1]
+        out_path = sys.argv[sys.argv.index("--out") + 1]
+        entry = _run_entry(_all_benches()[name])
+        with open(out_path, "w") as f:
+            json.dump(entry, f, default=str)
+        return
+
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    hermetic = os.environ.get("KOALJA_BENCH_HERMETIC", "1") != "0"
+    results = {}
+    for name, fn in _all_benches().items():
+        if hermetic:
+            results[name] = _run_hermetic(name, repo_root)
+        else:
+            results[name] = _run_entry(fn)
+        status = "FAIL" if "error" in results[name] else "ok"
         print(f"[{status}] {name} ({results[name].get('bench_wall_s', 0):.2f}s)")
         for k, v in (results[name].get("result") or {}).items():
             print(f"    {k}: {v}")
@@ -145,7 +204,6 @@ def main():
         json.dump(results, f, indent=2, default=str)
     print(f"\nwrote {path}")
 
-    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     traj_path = os.path.join(repo_root, "BENCH_koalja.json")
     with open(traj_path, "w") as f:
         json.dump(summarize(results), f, indent=2, default=str, sort_keys=True)

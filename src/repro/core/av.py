@@ -17,11 +17,14 @@ reference is free, moving the payload is the thing to avoid.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import itertools
-import json
 import time
 from typing import Any, Optional
+
+# Content hashing moved to repro.core.hashing in PR 8 (batched + kernelized
+# data plane); the names are re-exported here because av is the historical
+# import site for them throughout the engine.
+from .hashing import _stable_hash_bytes, content_hash, is_ghost  # noqa: F401
 
 _AV_COUNTER = itertools.count()
 
@@ -37,72 +40,6 @@ def reserve_uid_numbers(n: int) -> list:
     a merged registry can never collide with AVs minted locally in between.
     """
     return [next(_AV_COUNTER) for _ in range(max(0, int(n)))]
-
-
-def _stable_hash_bytes(data: bytes) -> str:
-    return hashlib.sha256(data).hexdigest()[:16]
-
-
-def is_ghost(payload: Any) -> bool:
-    """True for abstract payloads (shape+dtype but no materialized bytes):
-    ``jax.ShapeDtypeStruct``, :class:`~repro.core.wireframe.GhostValue`, and
-    anything else that *declares* ``nbytes = None``. Ghosts are pure
-    metadata — the circuit routes them without ever touching the store.
-
-    The check is deliberately narrow: a payload must opt in, either by being
-    a ShapeDtypeStruct or by carrying an explicit ``nbytes`` of None. Real
-    array-likes that merely lack an ``nbytes`` attribute (e.g. sparse
-    matrices) are data, not ghosts, and go through the store."""
-    if type(payload).__name__ == "ShapeDtypeStruct":
-        return True
-    return (
-        hasattr(payload, "shape")
-        and hasattr(payload, "dtype")
-        and hasattr(payload, "nbytes")
-        and payload.nbytes is None
-    )
-
-
-def content_hash(payload: Any) -> str:
-    """Content hash of a payload for cache keys and travel documents.
-
-    Arrays are hashed by (shape, dtype, bytes) — for jax Arrays we hash the
-    host copy only when small, otherwise (shape, dtype, trace-id) which is
-    stable within a process. Ghost values (ShapeDtypeStruct) hash by aval:
-    wireframing (paper §III.K) needs identity of *shape*, not data.
-    """
-    try:  # numpy-like arrays
-        import numpy as np
-
-        if hasattr(payload, "shape") and hasattr(payload, "dtype"):
-            if not hasattr(payload, "nbytes") or payload.nbytes is None:
-                # ShapeDtypeStruct / abstract value: hash the aval.
-                return _stable_hash_bytes(
-                    f"ghost:{payload.shape}:{payload.dtype}".encode()
-                )
-            if payload.nbytes <= (1 << 22):  # <= 4 MiB: hash real bytes
-                arr = np.asarray(payload)
-                return _stable_hash_bytes(
-                    arr.tobytes() + str(arr.shape).encode() + str(arr.dtype).encode()
-                )
-            # Large device arrays: avoid device->host transfer (transport
-            # avoidance applies to hashing too). Sample a deterministic
-            # stripe + shape/dtype. Documented as a sampled hash.
-            arr = np.asarray(payload).reshape(-1)
-            stripe = arr[:: max(1, arr.size // 4096)][:4096]
-            return _stable_hash_bytes(
-                stripe.tobytes() + f"{payload.shape}:{payload.dtype}:sampled".encode()
-            )
-    except Exception:
-        pass
-    if isinstance(payload, (dict, list, tuple)):
-        try:
-            return _stable_hash_bytes(
-                json.dumps(payload, sort_keys=True, default=repr).encode()
-            )
-        except TypeError:
-            pass
-    return _stable_hash_bytes(repr(payload).encode())
 
 
 @dataclasses.dataclass

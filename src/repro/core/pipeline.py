@@ -156,6 +156,9 @@ class PipelineManager:
             self.registry.bind_journal(journal)
             if self.cache is not None:
                 self.cache.bind_journal(journal)
+        # unstable-hash anomalies (unpicklable payloads whose digests are
+        # process-local) surface in the visitor trail rather than vanishing
+        self.store.bind_provenance(self.registry)
         # max_rounds survives as the per-task fire budget per drain (cycle
         # rate control); it no longer multiplies full-graph scans.
         self.max_rounds = max_rounds

@@ -42,6 +42,8 @@ from __future__ import annotations
 import threading
 from typing import TYPE_CHECKING, Optional
 
+from .task import FiringBatch
+
 if TYPE_CHECKING:  # pragma: no cover
     from .pipeline import PipelineManager
     from .task import SmartTask
@@ -183,10 +185,14 @@ class Scheduler:
             self.tasks_executed += len(results)
             # Emission is serialized in wave order: downstream arrival seqs
             # (merge FCFS) are identical across Inline/Concurrent backends.
-            for task, (name, out_avs) in zip(wave, results):
-                self._relieve_backpressure(task, tasks)
-                task._emit(out_avs)
-                fired.setdefault(name, []).append(out_avs)
+            # A coalescing task returns a FiringBatch; each firing emits in
+            # its original order, so seqs match the uncoalesced schedule.
+            for task, (name, out) in zip(wave, results):
+                firings = out if isinstance(out, FiringBatch) else [out]
+                for out_avs in firings:
+                    self._relieve_backpressure(task, tasks)
+                    task._emit(out_avs)
+                    fired.setdefault(name, []).append(out_avs)
             # A task may still be ready from already-buffered data (no new
             # notification will come for it) — requeue it. external=False:
             # draining one's own buffers is not arrival-driven work, so it
@@ -327,11 +333,13 @@ class Scheduler:
     def _execute_one(self, task: "SmartTask") -> dict:
         if self.manager.placement is not None:
             self.manager.placement.place_wave(self.manager, [task])
-        [(_, out_avs)] = self._runner().run_wave(self.manager, [task])
-        self._relieve_backpressure(task, self.manager.pipeline.tasks)
-        task._emit(out_avs)
+        [(_, out)] = self._runner().run_wave(self.manager, [task])
+        firings = out if isinstance(out, FiringBatch) else [out]
+        for out_avs in firings:
+            self._relieve_backpressure(task, self.manager.pipeline.tasks)
+            task._emit(out_avs)
         self.tasks_executed += 1
-        return out_avs
+        return firings[-1] if firings else {}
 
     # ------------------------------------------------------------------
 

@@ -34,7 +34,7 @@ from typing import Any, Iterable, Optional, Union
 
 import numpy as np
 
-from .av import content_hash
+from .hashing import content_hash_batch
 
 
 class _Timer:
@@ -91,8 +91,29 @@ class ArtifactStore:
         self.publishes = 0
         self.bytes_published = 0
         self.adopts = 0
+        # payloads whose content hash fell back to a process-local repr
+        # digest (not even picklable) — each one is journaled as an
+        # ``unstable_hash`` anomaly through the bound registry
+        self.unstable_hashes = 0
+        self._provenance = None
         if object_dir:
             os.makedirs(object_dir, exist_ok=True)
+
+    def bind_provenance(self, registry: Any) -> None:
+        """Give the store a registry to journal ``unstable_hash`` anomalies
+        through: a payload that defeats even the pickle hash tier gets a
+        process-local digest, which silently breaks memo dedup across
+        workers — that deserves a forensic record, not a silent repr."""
+        self._provenance = registry
+
+    def _on_unstable(self, note: str) -> None:
+        self.unstable_hashes += 1
+        reg = self._provenance
+        if reg is not None:
+            try:
+                reg.record_anomaly("store", note)
+            except Exception:
+                pass
 
     # -- rho policy ---------------------------------------------------------
     @property
@@ -173,29 +194,54 @@ class ArtifactStore:
     # -- API ----------------------------------------------------------------
     def put(self, payload: Any, prefer: Optional[str] = None) -> tuple:
         """Store payload; return (uri, content_hash). Reference-dedup by hash:
-        re-putting resident content moves zero bytes (counted)."""
-        h = content_hash(payload)
-        nbytes = self._nbytes(payload)
+        re-putting resident content moves zero bytes (counted). Thin wrapper
+        over :meth:`put_batch` — the engine's ingest seam."""
+        uri, h, _ = self.put_batch((payload,), prefer=prefer)[0]
+        return uri, h
+
+    def put_batch(
+        self,
+        payloads: Iterable[Any],
+        prefer: Optional[str] = None,
+        hashes: Optional[list] = None,
+    ) -> list:
+        """Store a wave's payloads in one fused call: all content hashes are
+        computed through :func:`content_hash_batch` (one buffer pass for the
+        small-array tier), then every placement decision happens under ONE
+        lock acquisition. Per-payload semantics and counters are identical
+        to N calls to :meth:`put`. ``hashes`` lets a caller that already
+        batch-hashed the payloads (e.g. ``finish_execution``) skip the
+        rehash. Returns ``[(uri, chash, nbytes), ...]``."""
+        payloads = list(payloads)
+        if hashes is None:
+            hashes = content_hash_batch(payloads, on_unstable=self._on_unstable)
+        sizes = [self._nbytes(p) for p in payloads]
+        out = []
         with self._lock:
-            self.puts += 1
-            self._sizes.setdefault(h, nbytes)
-            if h in self._local:
-                self._local.move_to_end(h)
-                self.bytes_not_moved += nbytes
-                return f"local://{h}", h
-            if prefer != "local" and self._in_object(h):
-                self.bytes_not_moved += nbytes
-                return f"object://{h}", h
-            tier = prefer
-            if tier is None:
-                tier = "local" if nbytes <= self.local_bytes_limit else "object"
-            if tier == "object" and self.object_dir is None:
-                tier = "local"  # no object tier configured
-            if tier == "local":
-                self._insert_local(h, payload, nbytes)
-                return f"local://{h}", h
-            self._write_object(h, payload, nbytes)
-            return f"object://{h}", h
+            for payload, h, nbytes in zip(payloads, hashes, sizes):
+                out.append((self._put_locked(payload, h, nbytes, prefer), h, nbytes))
+        return out
+
+    def _put_locked(self, payload: Any, h: str, nbytes: int, prefer: Optional[str]) -> str:
+        self.puts += 1
+        self._sizes.setdefault(h, nbytes)
+        if h in self._local:
+            self._local.move_to_end(h)
+            self.bytes_not_moved += nbytes
+            return f"local://{h}"
+        if prefer != "local" and self._in_object(h):
+            self.bytes_not_moved += nbytes
+            return f"object://{h}"
+        tier = prefer
+        if tier is None:
+            tier = "local" if nbytes <= self.local_bytes_limit else "object"
+        if tier == "object" and self.object_dir is None:
+            tier = "local"  # no object tier configured
+        if tier == "local":
+            self._insert_local(h, payload, nbytes)
+            return f"local://{h}"
+        self._write_object(h, payload, nbytes)
+        return f"object://{h}"
 
     def get(self, uri: str) -> Any:
         """Resolve a reference to its payload. The tier in the URI is a
@@ -328,19 +374,31 @@ class ArtifactStore:
         object tier *before* this write — the parent's ``adopt`` uses it to
         keep ``bytes_not_moved`` accounting identical to an in-process
         ``put`` of the same content."""
-        h = content_hash(payload)
-        nbytes = self._nbytes(payload)
+        return self.export_batch((payload,))[0]
+
+    def export_batch(self, payloads: Iterable[Any], hashes: Optional[list] = None) -> list:
+        """Worker-side batch ingest: hash a whole firing's outputs in one
+        fused call, then write them to the shared object tier under one
+        lock. Returns ``[(uri, chash, nbytes, existed), ...]`` — the same
+        tuples N :meth:`export` calls would have produced."""
+        payloads = list(payloads)
+        if hashes is None:
+            hashes = content_hash_batch(payloads, on_unstable=self._on_unstable)
+        sizes = [self._nbytes(p) for p in payloads]
+        out = []
         with self._lock:
             if self.object_dir is None:
                 raise RuntimeError(
                     "export() needs an object tier — call ensure_object_dir()"
                 )
-            self.puts += 1
-            self._sizes.setdefault(h, nbytes)
-            existed = self._in_object(h)
-            if not existed:
-                self._write_object(h, payload, nbytes)
-        return f"object://{h}", h, nbytes, bool(existed)
+            for payload, h, nbytes in zip(payloads, hashes, sizes):
+                self.puts += 1
+                self._sizes.setdefault(h, nbytes)
+                existed = self._in_object(h)
+                if not existed:
+                    self._write_object(h, payload, nbytes)
+                out.append((f"object://{h}", h, nbytes, bool(existed)))
+        return out
 
     def adopt(self, chash: str, nbytes: int, existed: bool = False) -> str:
         """Parent-side bookkeeping for a payload a worker already exported
@@ -424,5 +482,6 @@ class ArtifactStore:
             "publishes": self.publishes,
             "bytes_published": self.bytes_published,
             "adopts": self.adopts,
+            "unstable_hashes": self.unstable_hashes,
             "rho": self.rho,
         }

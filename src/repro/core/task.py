@@ -12,6 +12,7 @@ outputs (or a single value for single-output tasks).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import inspect
@@ -21,9 +22,23 @@ from typing import Any, Callable, Optional
 from repro.cache import MemoCache, make_record, snapshot_key
 
 from .av import AnnotatedValue, content_hash, is_ghost
+from .hashing import content_hash_batch
 from .policy import InputSpec, SnapshotPolicy
 from .provenance import ProvenanceRegistry
 from .store import ArtifactStore
+
+
+class FiringBatch(list):
+    """Outputs of a *coalesced* ``execute()``: one ``{output: AV}`` dict per
+    firing, in firing order. Tasks opted in via ``TaskHandle.coalesce`` drain
+    several ready snapshots in one dispatch; the scheduler emits each firing
+    separately and in order, so downstream arrival order (merge FCFS) is
+    bit-identical to the non-coalesced run — only the per-dispatch overhead
+    is amortized."""
+
+    @property
+    def last(self) -> dict:
+        return self[-1] if self else {}
 
 
 @dataclasses.dataclass
@@ -86,11 +101,12 @@ class ServiceCall:
 
     def __call__(self, *args: Any) -> Any:
         resp = self.fn(*args)
+        args_hash, response_hash = content_hash_batch((args, resp))
         self.frozen_responses.append(
             {
                 "service": self.name,
-                "args_hash": content_hash(args),
-                "response_hash": content_hash(resp),
+                "args_hash": args_hash,
+                "response_hash": response_hash,
                 "timestamp": time.time(),
             }
         )
@@ -111,6 +127,7 @@ class SmartTask:
         services: Optional[dict] = None,
         source: bool = False,
         zone: Optional[str] = None,
+        coalesce_max: Optional[int] = None,
     ) -> None:
         self.name = name
         self.fn = fn
@@ -129,6 +146,9 @@ class SmartTask:
             for n, s in (services or {}).items()
         }
         self.source = source
+        # Arrival coalescing (TaskHandle.coalesce): drain up to this many
+        # ready snapshots in one execute() dispatch. 1 = classic behavior.
+        self.coalesce_max = max(1, int(coalesce_max or 1))
         # Extended-cloud placement (repro.topology): `pinned_zone` is the
         # user's constraint (TaskHandle.place), `zone` the current
         # assignment — rewritten per wave by the manager's PlacementPolicy.
@@ -194,6 +214,17 @@ class SmartTask:
         return self.policy.ready()
 
     # -- execution ---------------------------------------------------------------
+    def _journal_staging(self, registry: ProvenanceRegistry):
+        """Batching window for this firing's journal writes: every record the
+        firing produces (visits, AVs, ledger charges, memo inserts) lands in
+        one fused ``append_batch`` at window exit — one lock acquisition, one
+        encode buffer, one write/fsync decision per firing instead of per
+        record."""
+        journal = getattr(registry, "journal", None)
+        if journal is None or getattr(journal, "closed", False):
+            return contextlib.nullcontext()
+        return journal.staging()
+
     def execute(
         self,
         store: ArtifactStore,
@@ -203,7 +234,9 @@ class SmartTask:
         emit: bool = True,
     ) -> dict:
         """Form a snapshot, consult the memo cache, run user code if needed,
-        and emit output AVs onto outgoing links. Returns {output_name: AV}.
+        and emit output AVs onto outgoing links. Returns {output_name: AV} —
+        or a :class:`FiringBatch` of such dicts when this task coalesces and
+        more than one snapshot was ready.
 
         Payloads are fetched lazily: links carried only ``(uri, chash)``
         references, and bytes move just before user code runs — a memo hit
@@ -212,18 +245,32 @@ class SmartTask:
         ``emit=False`` defers the ``_emit`` step to the caller: the event
         scheduler runs a wave's user code concurrently but emits serially in
         wave order, so downstream arrival seqs (merge FCFS) stay
-        deterministic regardless of which worker finished first.
+        deterministic regardless of which worker finished first. With a
+        FiringBatch the caller must emit each firing in order.
         """
-        status, payload = self.begin_execution(store, registry, cache)
-        if status == "hit":
+        firings: list = []
+        while True:
+            with self._journal_staging(registry):
+                status, payload = self.begin_execution(store, registry, cache)
+                if status == "hit":
+                    out = payload
+                else:
+                    result, dt = self.run_user_fn(payload, store)
+                    out = self.finish_execution(
+                        payload, result, dt, store, registry, cache, emit=False
+                    )
             if emit:
-                self._emit(payload)
-            return payload
-        plan = payload
-        result, dt = self.run_user_fn(plan, store)
-        return self.finish_execution(
-            plan, result, dt, store, registry, cache, emit=emit
-        )
+                self._emit(out)
+            firings.append(out)
+            # Coalescing: drain further ready snapshots in the same dispatch
+            # (opt-in; a task is in at most one wave at a time, so draining
+            # here races nothing). Firing order matches what the scheduler's
+            # requeue loop would have produced wave by wave.
+            if len(firings) >= self.coalesce_max or not self.policy.ready():
+                break
+        if len(firings) == 1:
+            return firings[0]
+        return FiringBatch(firings)
 
     def begin_execution(
         self,
@@ -238,6 +285,15 @@ class SmartTask:
         ``run_user_fn`` + ``finish_execution``, or in a worker process via
         the plan's reference view (:mod:`repro.runtime`). Neither path
         emits; that stays with the caller (the scheduler's serial step)."""
+        with self._journal_staging(registry):
+            return self._begin_execution(store, registry, cache)
+
+    def _begin_execution(
+        self,
+        store: ArtifactStore,
+        registry: ProvenanceRegistry,
+        cache: Optional[MemoCache] = None,
+    ) -> tuple:
         # Settle deferred zone-crossing counts now that placement has fixed
         # this firing's zone: a ref "crossed" only if its birth zone differs
         # from where consumption actually happens (hash-only ghost
@@ -348,7 +404,7 @@ class SmartTask:
         kwargs = {}
         for name, val in plan.snap.items():
             if isinstance(val, list):
-                kwargs[name] = [self._materialize(store, a) for a in val]
+                kwargs[name] = self._materialize_batch(store, val)
             else:
                 kwargs[name] = self._materialize(store, val)
         for sname, svc in self.services.items():
@@ -373,6 +429,22 @@ class SmartTask:
         """Phase 3: count the execution, store outputs, mint + register the
         output AVs, memoize, and (optionally) emit — exactly the tail of the
         classic single-call ``execute``."""
+        with self._journal_staging(registry):
+            return self._finish_execution(
+                plan, result, dt, store, registry, cache, emit=emit
+            )
+
+    def _finish_execution(
+        self,
+        plan: ExecutionPlan,
+        result: Any,
+        dt: float,
+        store: ArtifactStore,
+        registry: ProvenanceRegistry,
+        cache: Optional[MemoCache] = None,
+        *,
+        emit: bool = True,
+    ) -> dict:
         parent_uids, key = plan.parent_uids, plan.key
         if not plan.use_cache:
             cache = None
@@ -396,13 +468,27 @@ class SmartTask:
 
         out_avs, outputs_rec, out_uids, out_nbytes = {}, {}, {}, {}
         any_ghost = False
-        for oname in self.outputs:
-            payload = result[oname]
-            if is_ghost(payload):
+        # Batched ingest: one fused content_hash_batch over every output,
+        # then one put_batch (single store-lock acquisition) for the
+        # non-ghost payloads — digests and counters identical to the old
+        # per-output put loop.
+        payloads = [result[oname] for oname in self.outputs]
+        hashes = content_hash_batch(
+            payloads, on_unstable=getattr(store, "_on_unstable", None)
+        )
+        ghost_flags = [is_ghost(p) for p in payloads]
+        stored = store.put_batch(
+            [p for p, g in zip(payloads, ghost_flags) if not g],
+            hashes=[h for h, g in zip(hashes, ghost_flags) if not g],
+        )
+        stored_iter = iter(stored)
+        for oname, payload, chash, ghost in zip(
+            self.outputs, payloads, hashes, ghost_flags
+        ):
+            if ghost:
                 # Ghost outputs never touch the store: the shape spec *is*
                 # the metadata, and it rides on the AV itself (§III.K).
                 any_ghost = True
-                chash = content_hash(payload)
                 meta = {"ghost": True, "ghost_spec": payload}
                 if self.zone is not None:
                     meta["zone"] = self.zone
@@ -411,8 +497,7 @@ class SmartTask:
                     region=self.region, meta=meta,
                 )
             else:
-                uri, chash = store.put(payload)
-                nbytes = store._nbytes(payload)
+                uri, chash, nbytes = next(stored_iter)
                 meta = None
                 if self.zone is not None:
                     # birth certificate for the transfer ledger: outputs are
@@ -483,6 +568,21 @@ class SmartTask:
         worker only computed bytes and parked them in the shared object
         tier. A retried wave therefore cannot double-register anything: a
         worker that died mid-task left no parent-side state at all."""
+        with self._journal_staging(registry):
+            return self._finish_remote(
+                plan, outcome, store, registry, cache, emit=emit
+            )
+
+    def _finish_remote(
+        self,
+        plan: ExecutionPlan,
+        outcome: dict,
+        store: ArtifactStore,
+        registry: ProvenanceRegistry,
+        cache: Optional[MemoCache] = None,
+        *,
+        emit: bool = False,
+    ) -> dict:
         self.account_remote_inputs(store, plan)
         for sname, calls in (outcome.get("services") or {}).items():
             svc = self.services.get(sname)
@@ -555,6 +655,13 @@ class SmartTask:
             nbytes = av.meta.get("nbytes") or store.nbytes_of(av.chash) or 0
             self.ledger.on_materialize(av.chash, int(nbytes), src_zone, self.zone)
         return store.get(store.pin_local(av.uri, region=av.region))
+
+    def _materialize_batch(self, store: ArtifactStore, avs: list) -> list:
+        """Materialize a buffered/window input slice. Ledger charges land in
+        exact AV order (the determinism contract); the loop is the data
+        plane's per-input seam — batched fetch strategies plug in here
+        without touching ``run_user_fn``."""
+        return [self._materialize(store, av) for av in avs]
 
     def _emit(self, out_avs: dict) -> None:
         self.last_outputs.update(out_avs)

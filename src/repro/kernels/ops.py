@@ -16,6 +16,7 @@ import jax
 from . import ref
 from .flash_attention import flash_attention
 from .flash_decode import flash_decode
+from .hash_tree import hash_tree_state
 from .mamba_scan import mamba_scan
 from .moe_gmm import moe_gmm
 
@@ -44,6 +45,13 @@ def moe_gmm_op(x, w_gate, w_up, w_down, *, block_c=128, block_f=256, interpret=T
     )
 
 
+@functools.partial(jax.jit, static_argnames=("blocks_per_chunk", "interpret"))
+def hash_tree_op(words, *, blocks_per_chunk=64, interpret=True):
+    return hash_tree_state(
+        words, blocks_per_chunk=blocks_per_chunk, interpret=interpret
+    )
+
+
 def kernel_set(use_pallas: bool, interpret: bool = True) -> Optional[dict]:
     """The dict the model trunk consumes (keys: moe_gmm, mamba_scan)."""
     if not use_pallas:
@@ -60,4 +68,12 @@ def kernel_set(use_pallas: bool, interpret: bool = True) -> Optional[dict]:
             q, k, v, k_pos, q_pos, n_valid, window=window, interpret=interpret
         )
 
-    return {"moe_gmm": _gmm, "mamba_scan": _scan, "flash_decode": _decode}
+    def _hash_tree(words):
+        return hash_tree_state(words, interpret=interpret)
+
+    return {
+        "moe_gmm": _gmm,
+        "mamba_scan": _scan,
+        "flash_decode": _decode,
+        "hash_tree": _hash_tree,
+    }

@@ -91,6 +91,23 @@ def reference_decode(
     return o.reshape(B, 1, H, Dh).astype(q.dtype)
 
 
+def reference_hash_tree(words: jax.Array, *, block_words: int = 128) -> jax.Array:
+    """Pure-jnp oracle for ``hash_tree.hash_tree_state``: blockwise uint32
+    tree state (sum-of-mixed, xor-of-mixed, sum-of-blocksums) with wraparound
+    arithmetic — bit-exact vs the Pallas kernel and the numpy definition in
+    ``repro.core.hashing.tree_state_np``. ``len(words)`` must be a multiple
+    of ``block_words``."""
+    w = jnp.asarray(words, dtype=jnp.uint32).reshape(-1, block_words)
+    s = jnp.sum(w, axis=1, dtype=jnp.uint32)
+    j = jnp.arange(s.shape[0], dtype=jnp.uint32)
+    c = (j * jnp.uint32(0x9E3779B1) + jnp.uint32(0x85EBCA77)) | jnp.uint32(1)
+    m = (s ^ c) * c
+    h1 = jnp.sum(m, dtype=jnp.uint32)
+    h2 = jax.lax.reduce(m, jnp.uint32(0), jax.lax.bitwise_xor, (0,))
+    h3 = jnp.sum(s, dtype=jnp.uint32)
+    return jnp.stack([h1, h2, h3])
+
+
 def reference_gmm(
     x: jax.Array,  # (E, C, D) per-expert token bins
     w_gate: jax.Array,  # (E, D, F)

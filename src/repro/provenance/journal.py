@@ -76,6 +76,63 @@ class JournalCorruptError(ValueError):
     edited or damaged, not merely torn by a crash."""
 
 
+# One shared encoder instance: json.dumps() with non-default arguments
+# constructs a fresh JSONEncoder per call, which costs more than the
+# encode itself for hot-path-sized records.
+_ENCODER = json.JSONEncoder(separators=(",", ":"), default=repr).encode
+# record kinds are literal identifiers (visit/av/ledger/...); anything that
+# would need escaping inside the template's "kind" slot takes the slow path.
+# Kinds seen to match are memoized — the engine uses fewer than a dozen.
+_SAFE_KIND_RE = re.compile(r"^[A-Za-z0-9_.-]+$")
+_SAFE_KINDS: set = set()
+
+
+def encode_record(seq: int, kind: str, data: dict) -> str:
+    """One journal line (no trailing newline), byte-identical to the seed-era
+    ``json.dumps(..., default=repr, separators=(",", ":"))`` call. The
+    wrapper object is assembled by template (int seq and identifier kinds
+    never need escaping) so only ``data`` goes through the encoder — and
+    through a shared instance, not a per-call ``json.dumps``. Record
+    constructors already emit canonical key order (dataclass field order for
+    visits/AVs, literal order everywhere else), so there is no per-record
+    ``sort_keys`` re-sort on the hot path."""
+    if type(seq) is int and (
+        kind in _SAFE_KINDS or _SAFE_KIND_RE.match(kind)
+    ):
+        _SAFE_KINDS.add(kind)
+        return '{"seq":%d,"kind":"%s","data":%s}' % (seq, kind, _ENCODER(data))
+    return json.dumps(
+        {"seq": seq, "kind": kind, "data": data},
+        default=repr,
+        separators=(",", ":"),
+    )
+
+
+class _StagingWindow:
+    """Reentrant per-thread batching window for :meth:`Journal.staging`."""
+
+    __slots__ = ("_journal", "_outermost")
+
+    def __init__(self, journal: "Journal") -> None:
+        self._journal = journal
+        self._outermost = False
+
+    def __enter__(self) -> "_StagingWindow":
+        tl = self._journal._staging
+        if getattr(tl, "buf", None) is None:
+            tl.buf = []
+            self._outermost = True
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if not self._outermost:
+            return
+        tl = self._journal._staging
+        buf, tl.buf = tl.buf, None
+        if buf:
+            self._journal.append_batch(buf)
+
+
 def _rotate_bytes_env() -> Optional[int]:
     """Parse ``KOALJA_JOURNAL_ROTATE`` (a byte threshold; off by default).
     Raises at construction on a non-integer value, naming the knob."""
@@ -216,8 +273,13 @@ class Journal:
         self.rotate_bytes = int(rotate_bytes) if rotate_bytes else None
         self.rotate_records = int(rotate_records) if rotate_records else None
         self._lock = threading.Lock()
+        # Per-thread staging buffer (see staging()): while active, append()
+        # enqueues instead of writing, and the context exit flushes the whole
+        # firing through append_batch under ONE lock acquisition.
+        self._staging = threading.local()
         self.records_written = 0
         self.flushes = 0
+        self.encode_wall_s = 0.0  # cumulative record-encode time (stats())
         self.rotations = 0
         self.compactions = 0
         # cumulative across the journal's lifetime (reseeded from the
@@ -353,7 +415,16 @@ class Journal:
 
         ``seq`` overrides the auto-assigned number — segment journals write
         records under sequence numbers their parent reserved, so the merged
-        stream stays a total order across processes."""
+        stream stays a total order across processes.
+
+        Inside a :meth:`staging` window the record is enqueued on the
+        calling thread's buffer instead (flushed as one batch at window
+        exit) and ``-1`` is returned — every engine write-through ignores
+        the return value."""
+        buf = getattr(self._staging, "buf", None)
+        if buf is not None:
+            buf.append((kind, data, seq))
+            return -1
         with self._lock:
             if self.closed:
                 raise ValueError(f"journal {self.path} is closed")
@@ -361,17 +432,66 @@ class Journal:
             self._maybe_rotate_locked()
             return out
 
+    def append_batch(self, records: Iterable[tuple]) -> list:
+        """Append many records under **one** lock acquisition: seqs are
+        assigned monotonically in order, every line is encoded into one
+        ``"\\n".join``-ed buffer, the file sees one ``write``, and the
+        flush/fsync and rotation thresholds are consulted once per batch
+        instead of once per record. Each item is ``(kind, data)`` or
+        ``(kind, data, seq)``; returns the assigned seqs."""
+        records = list(records)
+        if not records:
+            return []
+        with self._lock:
+            if self.closed:
+                raise ValueError(f"journal {self.path} is closed")
+            t0 = time.perf_counter()
+            seqs: list = []
+            lines: list = []
+            for rec in records:
+                if len(rec) == 3:
+                    kind, data, seq = rec
+                else:
+                    kind, data = rec
+                    seq = None
+                if seq is None:
+                    seq = self._next_seq
+                    self._next_seq += 1
+                else:
+                    self._next_seq = max(self._next_seq, seq + 1)
+                lines.append(encode_record(seq, kind, data))
+                seqs.append(seq)
+            self.encode_wall_s += time.perf_counter() - t0
+            self._fh.write("\n".join(lines) + "\n")
+            n = len(lines)
+            self.records_written += n
+            self._live_records += n
+            self._pending += n
+            if self._pending >= self.flush_every_n:
+                self._flush_locked()
+            self._maybe_rotate_locked()
+            return seqs
+
+    def staging(self):
+        """Context manager that batches this thread's appends: while active,
+        :meth:`append` enqueues onto a thread-local buffer, and exit flushes
+        the buffer through :meth:`append_batch` (one lock, one encode buffer,
+        one write/fsync decision). The engine wraps each task firing in a
+        staging window so a firing's records — visits, AVs, ledger charges,
+        memo inserts — land as one fused batch. Nested windows join the
+        outermost one; flush happens even if the body raises, so anomaly
+        records from a failing firing still reach disk."""
+        return _StagingWindow(self)
+
     def _append_locked(self, kind: str, data: dict, seq: Optional[int] = None) -> int:
         if seq is None:
             seq = self._next_seq
             self._next_seq += 1
         else:
             self._next_seq = max(self._next_seq, seq + 1)
-        line = json.dumps(
-            {"seq": seq, "kind": kind, "data": data},
-            default=repr,
-            separators=(",", ":"),
-        )
+        t0 = time.perf_counter()
+        line = encode_record(seq, kind, data)
+        self.encode_wall_s += time.perf_counter() - t0
         self._fh.write(line + "\n")
         self.records_written += 1
         self._live_records += 1
@@ -649,6 +769,7 @@ class Journal:
                 ),
                 "flushes": self.flushes,
                 "flush_every_n": self.flush_every_n,
+                "encode_wall_s": self.encode_wall_s,
                 "next_seq": self._next_seq,
                 "segments": len(chain["segments"])
                 + (1 if chain["live"] else 0),

@@ -38,7 +38,8 @@ import time
 import traceback
 from typing import Optional
 
-from repro.core.av import AnnotatedValue, content_hash, is_ghost
+from repro.core.av import AnnotatedValue, is_ghost
+from repro.core.hashing import content_hash_batch
 from repro.core.provenance import VisitorEntry
 
 try:
@@ -317,17 +318,28 @@ def _execute_request(manager, msg: dict) -> dict:
     result = task.fn(**kwargs)
     dt = time.perf_counter() - t0
     result = _normalize_result(task, result)
+    # hash the whole firing's outputs in one fused call, then export the
+    # non-ghosts as a batch with the digests precomputed (hash work is not
+    # repeated inside the store)
+    payloads = [result[oname] for oname in task.outputs]
+    hashes = content_hash_batch(payloads)
+    ghost_flags = [is_ghost(p) for p in payloads]
+    exported = iter(
+        manager.store.export_batch(
+            [p for p, g in zip(payloads, ghost_flags) if not g],
+            hashes=[h for h, g in zip(hashes, ghost_flags) if not g],
+        )
+    )
     outputs = {}
-    for oname in task.outputs:
-        payload = result[oname]
-        if is_ghost(payload):
+    for oname, payload, chash, ghost in zip(task.outputs, payloads, hashes, ghost_flags):
+        if ghost:
             outputs[oname] = {
                 "ghost": True,
-                "chash": content_hash(payload),
+                "chash": chash,
                 "ghost_spec": payload,
             }
         else:
-            uri, chash, nbytes, existed = manager.store.export(payload)
+            uri, chash, nbytes, existed = next(exported)
             outputs[oname] = {
                 "uri": uri,
                 "chash": chash,

@@ -34,6 +34,7 @@ class TaskDecl:
     min_interval_s: float = 0.0
     cache_ttl_s: Optional[float] = None
     zone: Optional[str] = None  # extended-cloud pin (TaskHandle.place)
+    coalesce_max: Optional[int] = None  # arrival coalescing (TaskHandle.coalesce)
 
     def input_named(self, name: str) -> Optional[InputSpec]:
         for s in self.inputs:
@@ -210,6 +211,22 @@ class TaskHandle:
     def zone(self) -> Optional[str]:
         """The declared pin (None = unpinned; placement policy decides)."""
         return self._decl.zone
+
+    def coalesce(self, max_batch: int) -> "TaskHandle":
+        """Opt in to arrival coalescing: when a scheduler wave finds this
+        task ready with several snapshots buffered, it fires up to
+        ``max_batch`` of them in one ``execute`` call — one journal staging
+        window per firing, batched hashing per firing — instead of one
+        wave round-trip each. Firing order, emissions, and provenance are
+        bit-identical to the uncoalesced schedule."""
+        self._ws._assert_mutable()
+        if max_batch < 1:
+            raise WiringError(
+                f"coalesce(max_batch={max_batch}) on task {self.name!r}: "
+                f"max_batch must be >= 1"
+            )
+        self._decl.coalesce_max = int(max_batch)
+        return self
 
     def buffer(self, n: int, slide: Optional[int] = None) -> "TaskHandle":
         """Buffer/window annotation on this task's sole input."""

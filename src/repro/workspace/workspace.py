@@ -460,6 +460,7 @@ class Workspace:
                     min_interval_s=decl.min_interval_s,
                     cache_ttl_s=decl.cache_ttl_s,
                     zone=decl.zone,
+                    coalesce_max=decl.coalesce_max,
                 )
             )
         for w in self._wires:

@@ -456,3 +456,92 @@ class TestConcurrentReads:
         assert truncated == 0
         seqs = [r["seq"] for r in records]
         assert seqs == list(range(len(seqs)))  # gapless total order
+
+
+# ---------------------------------------------------------------------------
+# fused batch encode/append (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+
+class TestBatchAppend:
+    RECORDS = [
+        ("visit", {"task": "score", "av_uid": "av-0001", "event": "executed",
+                   "timestamp": 1723100000.123456, "software_version": "v1",
+                   "note": "wall=0.000123s", "seq": 7}),
+        ("av", {"av": {"uid": "av-0002", "chash": "ab" * 8, "uri": "mem://x",
+                       "meta": None}, "parents": ["av-0001"]}),
+        ("anomaly", {"task": "t", "note": 'quote " and \\ backslash\nnewline'},),
+        ("ledger", {"bytes": 4096, "pair": ["cloud", "edge"], "energy_j": 0.05}),
+        ("odd", {"nan": float("nan"), "inf": float("inf"), "neg0": -0.0,
+                 "big": 10**40, "uni": "ünïcode ⚙", "obj": object()}),
+        ("nest", {"a": [1, [2, {"b": (3, 4)}]], "flags": [True, False, None]}),
+    ]
+
+    def test_encode_record_matches_json_dumps(self):
+        from repro.provenance.journal import encode_record
+
+        for i, (kind, data) in enumerate(self.RECORDS):
+            want = json.dumps(
+                {"seq": i, "kind": kind, "data": data},
+                default=repr, separators=(",", ":"),
+            )
+            assert encode_record(i, kind, data) == want
+
+    def test_append_batch_bytes_identical_to_scalar_appends(self, tmp_path):
+        a, b = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+        ja = Journal(str(a), flush_every_n=1)
+        for kind, data in self.RECORDS:
+            ja.append(kind, data)
+        ja.close()
+        jb = Journal(str(b), flush_every_n=1)
+        seqs = jb.append_batch(self.RECORDS)
+        jb.close()
+        # seq 0 is the journal's own meta header record
+        assert seqs == list(range(1, len(self.RECORDS) + 1))
+        strip = lambda p: [  # noqa: E731
+            l for l in p.read_text().splitlines() if '"kind":"meta"' not in l
+        ]
+        assert strip(a) == strip(b)
+
+    def test_staging_window_defers_and_flushes(self, tmp_path):
+        j = Journal(str(tmp_path / "s.jsonl"), flush_every_n=1)
+        with j.staging():
+            assert j.append("visit", {"n": 0}) == -1  # deferred
+            with j.staging():  # reentrant: joins the outer window
+                assert j.append("visit", {"n": 1}) == -1
+            assert j.records_written <= 1  # only the journal's own meta
+        j.append("visit", {"n": 2})  # post-window: direct append
+        j.close()
+        records, truncated, _ = read_chain(j.path)
+        assert truncated == 0
+        body = [r for r in records if r["kind"] != "meta"]
+        assert [r["data"]["n"] for r in body] == [0, 1, 2]
+        assert [r["seq"] for r in records] == list(range(len(records)))
+
+    def test_staging_window_flushes_on_exception(self, tmp_path):
+        j = Journal(str(tmp_path / "exc.jsonl"), flush_every_n=1)
+        with pytest.raises(RuntimeError):
+            with j.staging():
+                j.append("visit", {"n": 0})
+                raise RuntimeError("user fn failed")
+        j.close()
+        records, _, _ = read_chain(j.path)
+        assert any(
+            r["kind"] == "visit" and r["data"]["n"] == 0 for r in records
+        ), "records staged before the failure must still be durable"
+
+    def test_append_batch_rotates(self, tmp_path):
+        j = Journal(str(tmp_path / "rot.jsonl"), rotate_records=10)
+        j.append_batch([("visit", {"n": i}) for i in range(25)])
+        j.close()
+        assert j.stats()["rotations"] >= 1
+        records, truncated, _ = read_chain(j.path)
+        assert truncated == 0
+        assert [r["seq"] for r in records] == list(range(len(records)))
+
+    def test_encode_wall_s_counter(self, tmp_path):
+        j = Journal(str(tmp_path / "w.jsonl"))
+        j.append_batch([("visit", {"n": i}) for i in range(100)])
+        st = j.stats()
+        j.close()
+        assert st["encode_wall_s"] > 0.0

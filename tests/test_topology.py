@@ -45,9 +45,11 @@ def _iot_topology():
     return topo
 
 
-def _iot_ws(placement, executor=None, sensors=2, zones=EDGE_ZONES):
+def _iot_ws(placement, executor=None, sensors=2, zones=EDGE_ZONES, coalesce=None):
     """Edge fan-in: per-zone sensors -> per-zone aggregator -> cloud merge
-    reducer. Sensors and the reducer are pinned; aggregators float."""
+    reducer. Sensors and the reducer are pinned; aggregators float.
+    ``coalesce`` opts the aggregators and the reducer into arrival
+    coalescing (TaskHandle.coalesce) with the given max batch."""
     ws = Workspace(
         "iot", topology=_iot_topology(), placement=placement,
         executor=executor, cache=False,
@@ -63,6 +65,8 @@ def _iot_ws(placement, executor=None, sensors=2, zones=EDGE_ZONES):
             name=f"agg_{z}", inputs=[f"r{i}" for i in range(sensors)],
             outputs=["agg"],
         )
+        if coalesce is not None:
+            agg.coalesce(coalesce)
         for i in range(sensors):
             ws[f"s_{z}_{i}"]["reading"] >> agg[f"r{i}"]
     red = ws.task(
@@ -70,6 +74,8 @@ def _iot_ws(placement, executor=None, sensors=2, zones=EDGE_ZONES):
         name="reduce", inputs=[f"a_{z}" for z in zones], outputs=["total"],
         mode="merge",
     ).place("cloud")
+    if coalesce is not None:
+        red.coalesce(coalesce)
     for z in zones:
         ws[f"agg_{z}"]["agg"] >> red[f"a_{z}"]
     return ws
@@ -374,6 +380,30 @@ class TestExecutorDeterminism:
                 ex.shutdown()
         for other in prints[1:]:
             assert other == prints[0]
+
+    @pytest.mark.parametrize("placement", ["pin", "data_gravity"])
+    def test_identical_across_backends_with_coalescing(self, placement):
+        """Arrival coalescing (PR 8) regroups firings inside one execute
+        call; merge-FCFS order, visitor events, ledger bytes, and zone
+        executions must stay bit-identical to the uncoalesced schedule on
+        every backend."""
+        from repro.runtime import ProcessExecutor, ZonedProcessExecutor
+
+        baseline = _fingerprint(_drive(_iot_ws(placement), rounds=2))
+        backends = [
+            InlineExecutor(),
+            ConcurrentExecutor(max_workers=4),
+            ZonedExecutor(),
+            ZonedExecutor(inner=ConcurrentExecutor(max_workers=4)),
+            ProcessExecutor(max_workers=4),
+            ZonedProcessExecutor(max_workers=4),
+        ]
+        for ex in backends:
+            ws = _drive(_iot_ws(placement, executor=ex, coalesce=4), rounds=2)
+            print_ = _fingerprint(ws)
+            if hasattr(ex, "shutdown"):
+                ex.shutdown()
+            assert print_ == baseline
 
     def test_zoned_executor_partitions_by_zone(self):
         ex = ZonedExecutor(inner=ConcurrentExecutor(max_workers=4))

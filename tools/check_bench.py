@@ -1,0 +1,140 @@
+#!/usr/bin/env python
+"""Perf-smoke gate: rerun the hot-path benchmarks and fail on regression.
+
+Runs the benches named in ``GATED`` (policy/arrival throughput, journal
+throughput, and the PR 8 vectorized data plane) and compares every gated
+throughput metric against the committed trajectory file
+``BENCH_koalja.json``. A metric that lands more than ``TOLERANCE`` below
+its committed value fails the gate; higher is never a failure (the
+trajectory file is refreshed by ``python -m benchmarks.run``, not here).
+
+Each gated bench runs in a fresh interpreter via ``benchmarks.run --one``
+— the same hermetic methodology that produces the committed baseline, so
+the comparison is apples to apples (in one shared process, heap and GC
+state left by one bench skews the next one's timings).
+
+Usage: ``python tools/check_bench.py`` (exit 0 = no regression). CI runs
+this as the ``perf-smoke`` job.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import tempfile
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+BASELINE = REPO / "BENCH_koalja.json"
+
+# bench name -> gated dotted metrics (throughputs only: rates regress,
+# wall-clock totals vary with machine load and bench size)
+GATED = {
+    "B5_policy_throughput": ["merge.arrivals_per_s"],
+    "B11_journal_overhead": ["records_per_s"],
+    "B14_hotpath_throughput": [
+        "journal.records_per_s",
+        "coalesce.arrivals_per_s",
+    ],
+}
+
+TOLERANCE = 0.30  # fail when a metric drops >30% below the committed value
+
+
+def _dig(result: dict, dotted: str):
+    cur = result
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def _run_hermetic(bench: str) -> dict:
+    """Run one bench in a fresh interpreter; returns its result dict."""
+    fd, out_path = tempfile.mkstemp(suffix=".json", prefix="koalja-gate-")
+    os.close(fd)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (str(REPO / "src"), env.get("PYTHONPATH")) if p
+    )
+    try:
+        proc = subprocess.run(
+            [
+                sys.executable, "-m", "benchmarks.run",
+                "--one", bench, "--out", out_path,
+            ],
+            cwd=str(REPO),
+            env=env,
+        )
+        if proc.returncode != 0 or not os.path.getsize(out_path):
+            raise RuntimeError(f"{bench}: hermetic run exited {proc.returncode}")
+        with open(out_path) as f:
+            entry = json.load(f)
+    finally:
+        os.unlink(out_path)
+    if "error" in entry:
+        raise RuntimeError(f"{bench}: {entry['error']}")
+    return entry["result"]
+
+
+RETRIES = 2  # re-runs granted to a bench whose metrics land below floor
+
+
+def main() -> int:
+    baseline = json.loads(BASELINE.read_text())
+    failures, checked = [], 0
+    for bench, metrics in GATED.items():
+        committed = baseline.get(bench, {})
+        # fsync latency and scheduler jitter make single runs noisy; a
+        # bench only fails after RETRIES extra fresh-interpreter runs all
+        # leave some metric below its floor (best observed value counts)
+        best: dict = {}
+        for attempt in range(1 + RETRIES):
+            fresh = _run_hermetic(bench)
+            for dotted in metrics:
+                got = _dig(fresh, dotted)
+                if got is not None:
+                    best[dotted] = max(best.get(dotted, got), got)
+            if all(
+                committed.get(d) is None
+                or (
+                    best.get(d) is not None
+                    and best[d] >= float(committed[d]) * (1.0 - TOLERANCE)
+                )
+                for d in metrics
+            ):
+                break
+        for dotted in metrics:
+            want = committed.get(dotted)
+            got = best.get(dotted)
+            if want is None:
+                print(f"SKIP {bench}.{dotted}: no committed baseline")
+                continue
+            if got is None:
+                failures.append(f"{bench}.{dotted}: metric missing from run")
+                continue
+            checked += 1
+            floor = float(want) * (1.0 - TOLERANCE)
+            status = "FAIL" if got < floor else "ok"
+            print(
+                f"{status:4s} {bench}.{dotted}: {got:,.0f}/s "
+                f"(committed {float(want):,.0f}/s, floor {floor:,.0f}/s)"
+            )
+            if got < floor:
+                failures.append(
+                    f"{bench}.{dotted}: {got:,.0f}/s < floor {floor:,.0f}/s"
+                )
+    if failures:
+        print(f"\nperf-smoke FAILED ({len(failures)} regression(s)):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"\nperf-smoke OK: {checked} metrics within {TOLERANCE:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

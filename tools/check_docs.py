@@ -28,6 +28,7 @@ WALKTHROUGHS = (
     "docs/extended-cloud.md",
     "docs/journal.md",
     "docs/runtime.md",
+    "docs/hotpath.md",
 )
 
 # [text](target) — markdown links, excluding images handled identically
