@@ -100,6 +100,12 @@ _HEADLINES = {
         "coalesce.arrivals_per_s",
         "coalesce.speedup_x",
     ],
+    "B15_multitenant": [
+        "dedup_ratio_x",
+        "push_p99_ms",
+        "records_per_s",
+        "bytes_saved",
+    ],
     "B12_process_pool": [
         "speedup",
         "payload_bytes_over_pipe",

@@ -57,6 +57,13 @@ class ExecutionPlan:
     parent_uids: list  # lineage parents for every output AV
     key: str  # memo key (already looked up — it missed)
     use_cache: bool  # memoize the result (False for sources / cache off)
+    # Optional content-dedup closure (multi-tenant hubs): a cache that
+    # implements ``plan_dedup(key)`` may hand back a callable that replays
+    # the outputs another scope already computed for this key. The firing
+    # then skips the user function but keeps every tenant-visible side
+    # effect of a real execution (see ``run_user_fn``). Never pickled —
+    # plans crossing a process pipe go as ``snapshot_refs()``.
+    dedup: Any = None
 
     def snapshot_refs(self) -> dict:
         """Picklable reference view of the snapshot — ``(uri, chash)`` plus
@@ -387,18 +394,43 @@ class SmartTask:
                     out_avs[oname] = av
                 return ("hit", out_avs)
 
+        # Content-dedup peek (shared hubs): after a *local* miss, a cache
+        # implementing ``plan_dedup`` may know another scope already computed
+        # this key. Tasks with services stay ineligible — a real run grows
+        # their frozen-response log (which feeds later memo keys), and a
+        # replay must never diverge from what a solo run would have done.
+        dedup = None
+        if cache is not None and not self.services:
+            peek = getattr(cache, "plan_dedup", None)
+            if peek is not None:
+                dedup = peek(key)
+
         plan = ExecutionPlan(
             snap=snap,
             in_hashes=in_hashes,
             parent_uids=parent_uids,
             key=key,
             use_cache=cache is not None,
+            dedup=dedup,
         )
         return ("run", plan)
 
     def run_user_fn(self, plan: ExecutionPlan, store: ArtifactStore) -> tuple:
         """Phase 2 (local): materialize the plan's snapshot and run the user
         function on the calling thread. Returns ``(result, wall_seconds)``."""
+        if plan.dedup is not None:
+            # Dedup replay: load the outputs some other scope already
+            # computed for this content key instead of re-running the user
+            # function. The input-side ledger charges a real run would have
+            # made at _materialize are replicated in the same snapshot
+            # order, so the caller's ``finish_execution`` produces provenance
+            # byte-identical to an actual execution. A None replay (the
+            # shared payloads were evicted meanwhile) falls through to the
+            # real run below.
+            replayed = plan.dedup(store)
+            if replayed is not None:
+                self.account_remote_inputs(store, plan)
+                return replayed, 0.0
         # materialize payloads (Principle 2: pin near the dependent) — this
         # is the only point where input bytes actually move
         kwargs = {}

@@ -253,6 +253,7 @@ class Journal:
         segment: Optional[str] = None,
         rotate_bytes: Optional[int] = None,
         rotate_records: Optional[int] = None,
+        seq_source: Optional["Journal"] = None,
     ) -> None:
         self.path = str(path)
         # Non-None marks this file as a *segment* of a parent journal (one
@@ -261,6 +262,13 @@ class Journal:
         # files back into one totally-ordered stream. The segment's own meta
         # header is bookkeeping, not history — merges drop it.
         self.segment = segment
+        # Non-None delegates sequence-number assignment to another journal
+        # (multi-tenant hubs: every per-tenant journal draws seqs from the
+        # hub journal's one counter via ``reserve``, so records across all
+        # tenant files form a single total order while each tenant's file
+        # stays strictly its own history). Lock order is always
+        # tenant-journal -> source-journal; the source never calls back.
+        self._seq_source = seq_source
         self._workspace = workspace
         if flush_every_n is None:
             flush_every_n = int(os.environ.get("KOALJA_JOURNAL_FLUSH", "64"))
@@ -406,6 +414,10 @@ class Journal:
         with self._lock:
             if self.closed:
                 raise ValueError(f"journal {self.path} is closed")
+            if self._seq_source is not None:
+                start = self._seq_source.reserve(n)
+                self._next_seq = max(self._next_seq, start + max(0, int(n)))
+                return start
             start = self._next_seq
             self._next_seq += max(0, int(n))
             return start
@@ -448,6 +460,18 @@ class Journal:
             t0 = time.perf_counter()
             seqs: list = []
             lines: list = []
+            # Delegated seq space: claim the whole batch's numbers from the
+            # source in ONE reserve call, so a firing's records stay
+            # contiguous in the hub's total order and the source lock is
+            # taken once per batch, not once per record.
+            delegated = iter(())
+            if self._seq_source is not None:
+                need = sum(
+                    1 for rec in records if len(rec) == 2 or rec[2] is None
+                )
+                if need:
+                    base = self._seq_source.reserve(need)
+                    delegated = iter(range(base, base + need))
             for rec in records:
                 if len(rec) == 3:
                     kind, data, seq = rec
@@ -455,8 +479,12 @@ class Journal:
                     kind, data = rec
                     seq = None
                 if seq is None:
-                    seq = self._next_seq
-                    self._next_seq += 1
+                    seq = next(delegated, None)
+                    if seq is None:
+                        seq = self._next_seq
+                        self._next_seq += 1
+                    else:
+                        self._next_seq = max(self._next_seq, seq + 1)
                 else:
                     self._next_seq = max(self._next_seq, seq + 1)
                 lines.append(encode_record(seq, kind, data))
@@ -485,8 +513,12 @@ class Journal:
 
     def _append_locked(self, kind: str, data: dict, seq: Optional[int] = None) -> int:
         if seq is None:
-            seq = self._next_seq
-            self._next_seq += 1
+            if self._seq_source is not None:
+                seq = self._seq_source.reserve(1)
+                self._next_seq = max(self._next_seq, seq + 1)
+            else:
+                seq = self._next_seq
+                self._next_seq += 1
         else:
             self._next_seq = max(self._next_seq, seq + 1)
         t0 = time.perf_counter()
@@ -860,22 +892,30 @@ def _merged(path: str, segment_paths: Iterable[str]) -> tuple:
     upto = int(info.get("upto_seq", -1))
     ck = info.get("checkpoint_data") or {}
     revoked: set = {int(s) for s in ck.get("revoked", [])}
-    for r in records:
-        if r.get("kind") == "revoked":
-            d = r.get("data") or {}
-            start = int(d.get("start", 0))
-            revoked.update(range(start, start + int(d.get("count", 0))))
+    seg_batches = []
     for seg in segment_paths:
         for f in _segment_files(seg):
             seg_records, seg_truncated = read_records(f)
             truncated += seg_truncated
-            records.extend(
-                r
-                for r in seg_records
-                if r.get("kind") not in ("meta", "checkpoint")
-                and int(r.get("seq", -1)) not in revoked
-                and int(r.get("seq", -1)) > upto
-            )
+            seg_batches.append(seg_records)
+    # Sweep revocation markers from *every* file before filtering any:
+    # in a multi-tenant hub merge the segments are themselves per-tenant
+    # journals, and it is the tenant (not the hub) that revoked its dead
+    # runners' windows.
+    for batch in [records] + seg_batches:
+        for r in batch:
+            if r.get("kind") == "revoked":
+                d = r.get("data") or {}
+                start = int(d.get("start", 0))
+                revoked.update(range(start, start + int(d.get("count", 0))))
+    for seg_records in seg_batches:
+        records.extend(
+            r
+            for r in seg_records
+            if r.get("kind") not in ("meta", "checkpoint")
+            and int(r.get("seq", -1)) not in revoked
+            and int(r.get("seq", -1)) > upto
+        )
     records.sort(key=lambda r: int(r.get("seq", -1)))
     return records, truncated, info
 

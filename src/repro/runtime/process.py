@@ -38,7 +38,11 @@ _DEAD = (BrokenPipeError, ConnectionResetError, EOFError, OSError)
 def _plan_all_real(plan) -> bool:
     """Remote-eligibility: plans with ghost inputs stay inline — a ghost run
     moves zero bytes by design, so a process hop buys nothing and the spec
-    objects (which may not pickle) never need to cross the pipe."""
+    objects (which may not pickle) never need to cross the pipe. Plans
+    carrying a dedup closure stay inline too: the replay is a store read
+    plus parent-side provenance, and the closure itself never pickles."""
+    if getattr(plan, "dedup", None) is not None:
+        return False
     for val in plan.snap.values():
         for av in val if isinstance(val, list) else [val]:
             if av.uri.startswith("ghost://"):

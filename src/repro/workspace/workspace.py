@@ -215,6 +215,10 @@ class Workspace:
     ):
         if journal_path is False:
             return None
+        if hasattr(journal_path, "append_batch"):
+            # a pre-built Journal instance (multi-tenant hubs hand each
+            # workspace a per-tenant journal drawing seqs from the hub)
+            return journal_path
         if journal_path is None:
             env = os.environ.get("KOALJA_JOURNAL", "").strip()
             if env.lower() in ("", "0", "false", "no", "off"):

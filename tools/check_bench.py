@@ -38,6 +38,7 @@ GATED = {
         "journal.records_per_s",
         "coalesce.arrivals_per_s",
     ],
+    "B15_multitenant": ["records_per_s"],
 }
 
 TOLERANCE = 0.30  # fail when a metric drops >30% below the committed value

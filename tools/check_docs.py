@@ -29,6 +29,7 @@ WALKTHROUGHS = (
     "docs/journal.md",
     "docs/runtime.md",
     "docs/hotpath.md",
+    "docs/tenancy.md",
 )
 
 # [text](target) — markdown links, excluding images handled identically
