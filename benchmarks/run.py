@@ -113,6 +113,14 @@ _HEADLINES = {
         "provenance_events_identical",
         "merge_fcfs_identical",
     ],
+    "B16_diurnal_load": [
+        "p99_push_s",
+        "total_energy_j",
+        "energy_margin_x",
+        "latency_margin_x",
+        "adaptive_resizes",
+        "adaptive_beats_all_static",
+    ],
 }
 
 

@@ -94,6 +94,9 @@ class MemoCache:
         self.evictions = 0
         self.executions_avoided = 0
         self.bytes_saved = 0
+        # hits served from a replica already resident in the consumer's
+        # zone (the zone-local tier): no cross-zone transfer was implied
+        self.zone_local_hits = 0
         # Concurrent waves consult the memo table from worker threads.
         self._lock = threading.RLock()
         # optional durable write-through (repro.provenance.Journal)
@@ -193,6 +196,12 @@ class MemoCache:
             self.bytes_saved += saved
         return saved
 
+    def note_zone_local_hit(self) -> None:
+        """Count a hit served from a same-zone replica (see
+        ``ArtifactStore.zone_resident``; the ledger credits the bytes)."""
+        with self._lock:
+            self.zone_local_hits += 1
+
     def invalidate_version(self, software_version_prefix: str) -> int:
         """Purge entries produced by a given software version (forensic
         recall: 'a change may be due to software errors, indicating that
@@ -229,6 +238,7 @@ class MemoCache:
                 "evictions": self.evictions,
                 "executions_avoided": self.executions_avoided,
                 "bytes_saved": self.bytes_saved,
+                "zone_local_hits": self.zone_local_hits,
             }
 
 

@@ -69,6 +69,7 @@ __all__ = [
     "tree_state_np",
     "tree_digest",
     "hashing_stats",
+    "bind_fallback_anomalies",
     "is_ghost",
     "LARGE_ARRAY_BYTES",
     "TREE_BLOCK_WORDS",
@@ -94,7 +95,37 @@ _STATS = {
     "tree_hashes": 0,  # large arrays hashed via the tree digest
     "pickle_hashes": 0,  # payloads hashed via the pickle tier
     "unstable_hashes": 0,  # repr fallbacks (pickle failed) — process-local!
+    "backend_fallbacks": 0,  # jnp/pallas kernel failures rescued by numpy
 }
+
+_HASH_BACKENDS = ("numpy", "jnp", "pallas")
+
+# Optional anomaly sink for kernel fallbacks (bound by PipelineManager to
+# registry.record_anomaly): a silently degraded backend is an operational
+# event worth a forensic record, not just a counter.
+_FALLBACK_SINK: Optional[Callable[[str], None]] = None
+
+
+def bind_fallback_anomalies(sink: Optional[Callable[[str], None]]) -> None:
+    """Route hash-backend fallback notices into an anomaly sink (typically
+    ``lambda note: registry.record_anomaly("hashing", note)``). Pass None to
+    unbind. The digests themselves are unaffected — the numpy path is
+    bit-identical — so this is observability, not determinism."""
+    global _FALLBACK_SINK
+    _FALLBACK_SINK = sink
+
+
+def _hash_backend() -> str:
+    """The validated ``KOALJA_HASH_BACKEND`` selection. Unknown values fail
+    loudly (like KOALJA_EXECUTOR / KOALJA_PLACEMENT) instead of silently
+    hashing on numpy while the operator believes a kernel is running."""
+    backend = os.environ.get("KOALJA_HASH_BACKEND", "numpy")
+    if backend not in _HASH_BACKENDS:
+        raise ValueError(
+            f"KOALJA_HASH_BACKEND={backend!r} is not a hash backend "
+            f"(choose from: {', '.join(_HASH_BACKENDS)})"
+        )
+    return backend
 
 
 def hashing_stats() -> dict:
@@ -196,7 +227,7 @@ def _tree_state(u8):
     (``KOALJA_HASH_BACKEND=jnp|pallas``) cover the chunk-aligned bulk with
     the kernel and finish the ragged remainder with numpy — bit-identical
     to the pure-numpy path by construction."""
-    backend = os.environ.get("KOALJA_HASH_BACKEND", "numpy")
+    backend = _hash_backend()
     if backend in ("jnp", "pallas"):
         try:
             import numpy as np
@@ -219,8 +250,20 @@ def _tree_state(u8):
                 head = (0, 0, 0)
             rest = _state_from_words(w[nk:], u8[n4:].tobytes(), nk // TREE_BLOCK_WORDS)
             return _combine_states(head, rest)
-        except Exception:
-            pass  # no jax / kernel import failure: fall back to numpy
+        except Exception as exc:
+            # no jax / kernel import failure: the numpy path computes the
+            # same bits, but count the degradation and leave a forensic
+            # trail instead of silently eating it forever
+            _STATS["backend_fallbacks"] += 1
+            if _FALLBACK_SINK is not None:
+                try:
+                    _FALLBACK_SINK(
+                        f"hash_backend_fallback: backend={backend!r} failed "
+                        f"({type(exc).__name__}: {exc}); digest computed on "
+                        f"numpy (bit-identical)"
+                    )
+                except Exception:
+                    pass
     return tree_state_np(u8)
 
 
@@ -385,6 +428,7 @@ def content_hash_batch(
     (see :meth:`repro.core.store.ArtifactStore.bind_provenance`).
     """
     payloads = list(payloads)
+    _hash_backend()  # fail loudly on a typo'd KOALJA_HASH_BACKEND up front
     _STATS["calls"] += 1
     _STATS["payloads"] += len(payloads)
     out: list = []

@@ -159,6 +159,13 @@ class PipelineManager:
         # unstable-hash anomalies (unpicklable payloads whose digests are
         # process-local) surface in the visitor trail rather than vanishing
         self.store.bind_provenance(self.registry)
+        # hash-kernel fallbacks (jnp/pallas failing over to numpy) surface
+        # the same way — the digest is unchanged, the degradation is not
+        from repro.core.hashing import bind_fallback_anomalies
+
+        bind_fallback_anomalies(
+            lambda note: self.registry.record_anomaly("hashing", note)
+        )
         # max_rounds survives as the per-task fire budget per drain (cycle
         # rate control); it no longer multiplies full-graph scans.
         self.max_rounds = max_rounds
@@ -227,6 +234,7 @@ class PipelineManager:
             if zone is not None:
                 meta = {"zone": zone, "nbytes": self.store.nbytes_of(chash)}
                 self.ledger.register_resident(chash, zone)
+                self.store.note_zone_resident(chash, zone)
             av = AnnotatedValue.produce(
                 chash, uri, f"edge:{input_name}", "edge", region=region, meta=meta
             )
@@ -258,6 +266,7 @@ class PipelineManager:
             meta["zone"] = t.zone
             meta["nbytes"] = self.store.nbytes_of(chash)
             self.ledger.register_resident(chash, t.zone)
+            self.store.note_zone_resident(chash, t.zone)
         av = AnnotatedValue.produce(
             chash, uri, t.name, t.version, region=region, meta=meta
         )

@@ -40,6 +40,7 @@ touched) quantifies the polling work avoided.
 from __future__ import annotations
 
 import threading
+from collections import deque
 from typing import TYPE_CHECKING, Optional
 
 from .task import FiringBatch
@@ -47,6 +48,87 @@ from .task import FiringBatch
 if TYPE_CHECKING:  # pragma: no cover
     from .pipeline import PipelineManager
     from .task import SmartTask
+
+
+class LoadSignals:
+    """Feedback snapshot for the adaptive runtime, recomputed at wave
+    boundaries by the scheduler that owns it.
+
+    Three signals, each chosen because a knob can act on it between waves
+    without touching merge order or provenance:
+
+      - **windowed wave-width percentiles** — how much simultaneous work the
+        circuit is actually presenting (p95 is what an adaptive pool sizes
+        itself to; pure function of the push schedule, so identical across
+        executor backends);
+      - **queue-depth high-water per drain** — burst pressure the current
+        drain built up before waves caught up;
+      - **per-task service-time EWMAs** — wall seconds per execution
+        (observability only: wall clocks vary run to run, so no
+        deterministic decision may depend on them).
+
+    Surfaced under ``stats()["scheduler"]["load"]`` and read by
+    :class:`~repro.workspace.executors.AdaptiveExecutor`.
+    """
+
+    #: EWMA smoothing for per-task service seconds
+    ALPHA = 0.3
+
+    def __init__(self, window: int = 64) -> None:
+        self.window = window
+        self._widths: deque = deque(maxlen=window)
+        self.waves_observed = 0
+        self.current_wave_width = 0
+        self.wave_width_p50 = 0
+        self.wave_width_p95 = 0
+        self.queue_depth_high_water = 0  # per-drain (current/last drain)
+        self.service_ewma_s: dict = {}  # task name -> EWMA wall seconds
+
+    @staticmethod
+    def _percentile(ordered: list, q: float) -> int:
+        # nearest-rank on the sorted window: deterministic, no interpolation
+        idx = max(0, min(len(ordered) - 1, int(q * len(ordered) + 0.999999) - 1))
+        return ordered[idx]
+
+    def observe_wave(self, width: int) -> None:
+        """Record a formed wave's width and refresh the width percentiles
+        (called on the scheduler thread *before* run_wave, so an adaptive
+        executor sees signals that include the wave it is about to run)."""
+        self.waves_observed += 1
+        self.current_wave_width = width
+        self._widths.append(width)
+        ordered = sorted(self._widths)
+        self.wave_width_p50 = self._percentile(ordered, 0.50)
+        self.wave_width_p95 = self._percentile(ordered, 0.95)
+
+    def observe_services(self, tasks: list) -> None:
+        """Fold the wave's tasks' per-execution EWMAs into the snapshot
+        (tasks update their own EWMA as executions finish)."""
+        for t in tasks:
+            ewma = getattr(t, "service_ewma_s", None)
+            if ewma is not None:
+                self.service_ewma_s[t.name] = ewma
+
+    @property
+    def recommended_workers(self) -> int:
+        """Pool size the signals suggest: the p95 wave width (at least 1).
+        Deterministic for a given push schedule — the adaptive executor
+        clamps it to its own [min, max] band."""
+        return max(1, int(self.wave_width_p95))
+
+    def snapshot(self) -> dict:
+        ewmas = dict(sorted(self.service_ewma_s.items()))
+        return {
+            "waves_observed": self.waves_observed,
+            "wave_width_window": len(self._widths),
+            "current_wave_width": self.current_wave_width,
+            "wave_width_p50": self.wave_width_p50,
+            "wave_width_p95": self.wave_width_p95,
+            "queue_depth_high_water_last_drain": self.queue_depth_high_water,
+            "recommended_workers": self.recommended_workers,
+            "service_ewma_s": ewmas,
+            "service_ewma_max_s": max(ewmas.values()) if ewmas else None,
+        }
 
 
 class SerialWaveRunner:
@@ -96,6 +178,10 @@ class Scheduler:
         self.budget_exhausted = 0
         self.sweeps = 0
         self.pulls = 0
+        # adaptive-runtime feedback snapshot (wave widths, queue pressure,
+        # service EWMAs), recomputed at wave boundaries in drain()
+        self.load = LoadSignals()
+        self._drain_depth_high = 0  # queue high-water within current drain
         self._subscribe_links()
 
     # ------------------------------------------------------------------
@@ -137,6 +223,8 @@ class Scheduler:
                 depth = len(self._dirty)
                 if depth > self.queue_depth_high_water:
                     self.queue_depth_high_water = depth
+                if depth > self._drain_depth_high:
+                    self._drain_depth_high = depth
             elif external and not entry:
                 self._dirty[task_name] = True
 
@@ -157,6 +245,8 @@ class Scheduler:
         n_tasks = len(tasks)
         fired: dict = {}
         budgets: dict = {}
+        with self._lock:
+            self._drain_depth_high = len(self._dirty)
         throttled, self._throttled = self._throttled, set()
         for name in throttled:  # fresh budget, pick up where the cap hit
             self.mark_dirty(name)
@@ -173,6 +263,11 @@ class Scheduler:
             self.waves += 1
             if len(wave) > self.max_wave_width:
                 self.max_wave_width = len(wave)
+            # wave boundary: refresh the load signals an AdaptiveExecutor
+            # will read inside the run_wave call below
+            self.load.observe_wave(len(wave))
+            with self._lock:
+                self.load.queue_depth_high_water = self._drain_depth_high
             # A polling engine would have scanned every task this round.
             self.polling_scan_equivalent += n_tasks
             # Extended-cloud placement happens here, on the scheduler thread,
@@ -183,6 +278,7 @@ class Scheduler:
                 mgr.placement.place_wave(mgr, wave)
             results = self._runner().run_wave(mgr, wave)
             self.tasks_executed += len(results)
+            self.load.observe_services(wave)
             # Emission is serialized in wave order: downstream arrival seqs
             # (merge FCFS) are identical across Inline/Concurrent backends.
             # A coalescing task returns a FiringBatch; each firing emits in
@@ -333,7 +429,9 @@ class Scheduler:
     def _execute_one(self, task: "SmartTask") -> dict:
         if self.manager.placement is not None:
             self.manager.placement.place_wave(self.manager, [task])
+        self.load.observe_wave(1)
         [(_, out)] = self._runner().run_wave(self.manager, [task])
+        self.load.observe_services([task])
         firings = out if isinstance(out, FiringBatch) else [out]
         for out_avs in firings:
             self._relieve_backpressure(task, self.manager.pipeline.tasks)
@@ -365,6 +463,7 @@ class Scheduler:
             "sweeps": self.sweeps,
             "pulls": self.pulls,
             "fire_budget": self.fire_budget,
+            "load": self.load.snapshot(),
         }
 
     def __repr__(self) -> str:

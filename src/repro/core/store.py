@@ -95,9 +95,39 @@ class ArtifactStore:
         # digest (not even picklable) — each one is journaled as an
         # ``unstable_hash`` anomaly through the bound registry
         self.unstable_hashes = 0
+        # zone-local tier (repro.topology adaptive runtime): which content
+        # hashes have a replica resident in which zone. Fed by task births,
+        # cross-zone materializations, and edge injections; consulted on
+        # memo hits so a cache hit in zone Z is served from a Z-local
+        # replica (never forcing a cross-zone transfer) when one exists.
+        self._zone_residents: dict = {}  # zone -> set of content hashes
+        self.zone_local_serves = 0  # zone_resident() checks that said yes
         self._provenance = None
         if object_dir:
             os.makedirs(object_dir, exist_ok=True)
+
+    # -- zone-local resident index (adaptive runtime, repro.topology) --------
+    def note_zone_resident(self, chash: str, zone: Optional[str]) -> None:
+        """Record that a replica of ``chash`` is resident in ``zone``."""
+        if zone is None:
+            return
+        with self._lock:
+            self._zone_residents.setdefault(zone, set()).add(chash)
+
+    def zone_resident(self, chash: str, zone: Optional[str]) -> bool:
+        """Is a replica of ``chash`` resident in ``zone``? A True answer on
+        a memo hit means the hit is served zone-locally (counted)."""
+        if zone is None:
+            return False
+        with self._lock:
+            hit = chash in self._zone_residents.get(zone, ())
+            if hit:
+                self.zone_local_serves += 1
+            return hit
+
+    def zone_resident_counts(self) -> dict:
+        with self._lock:
+            return {z: len(s) for z, s in sorted(self._zone_residents.items())}
 
     def bind_provenance(self, registry: Any) -> None:
         """Give the store a registry to journal ``unstable_hash`` anomalies
@@ -483,5 +513,7 @@ class ArtifactStore:
             "bytes_published": self.bytes_published,
             "adopts": self.adopts,
             "unstable_hashes": self.unstable_hashes,
+            "zone_residents": self.zone_resident_counts(),
+            "zone_local_serves": self.zone_local_serves,
             "rho": self.rho,
         }

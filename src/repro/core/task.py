@@ -171,6 +171,11 @@ class SmartTask:
         self.executions = 0
         self.cache_hits = 0
         self.bytes_saved = 0  # output bytes this task's memo hits never remade
+        # EWMA of wall seconds per execution (adaptive-runtime feedback;
+        # folded into the scheduler's LoadSignals at wave boundaries). Only
+        # this task's execution thread writes it — a task is in at most one
+        # wave at a time.
+        self.service_ewma_s: Optional[float] = None
         # wired by Pipeline
         self.in_links: dict = {}  # input name -> SmartLink
         self.out_links: dict = {}  # output name -> [SmartLink]
@@ -221,6 +226,27 @@ class SmartTask:
         return self.policy.ready()
 
     # -- execution ---------------------------------------------------------------
+    def _note_service(self, dt: float) -> None:
+        """Fold one execution's wall seconds into the service-time EWMA."""
+        alpha = 0.3
+        prev = self.service_ewma_s
+        self.service_ewma_s = dt if prev is None else alpha * dt + (1 - alpha) * prev
+
+    def _charge_compute(self, store: ArtifactStore, plan: "ExecutionPlan") -> None:
+        """Charge the ledger's compute account for this firing: the zone
+        where the task ran processed the snapshot's input bytes. Per-zone
+        sums, so the account (and its derived joules) is independent of
+        which backend ran the wave or in what order threads finished."""
+        if self.ledger is None:
+            return
+        total = 0
+        for _name, val in plan.snap.items():
+            for av in val if isinstance(val, list) else [val]:
+                if av.uri.startswith("ghost://"):
+                    continue
+                total += int(av.meta.get("nbytes") or store.nbytes_of(av.chash) or 0)
+        self.ledger.on_execute(self.zone, total)
+
     def _journal_staging(self, registry: ProvenanceRegistry):
         """Batching window for this firing's journal writes: every record the
         firing produces (visits, AVs, ledger charges, memo inserts) lands in
@@ -378,7 +404,27 @@ class SmartTask:
                         # wherever this replay happens to run. (Records
                         # minted on flat circuits fall back to the replay
                         # zone — there is no better information.)
-                        meta["zone"] = hit_zone or self.zone
+                        #
+                        # Zone-local tier: when a replica of the content is
+                        # *already resident here* (store's per-zone index),
+                        # the hit is served from it — the AV carries this
+                        # zone, downstream materializations bill nothing
+                        # cross-zone, and the ledger credits the bytes the
+                        # birth-zone billing would have moved.
+                        birth = hit_zone or self.zone
+                        n_out = int(hit_nbytes.get(oname, 0))
+                        if (
+                            birth != self.zone
+                            and self.ledger is not None
+                            and store.zone_resident(chash, self.zone)
+                        ):
+                            meta["zone"] = self.zone
+                            zone_local = getattr(cache, "note_zone_local_hit", None)
+                            if zone_local is not None:
+                                zone_local()
+                            self.ledger.credit_zone_local(chash, n_out, self.zone)
+                        else:
+                            meta["zone"] = birth
                         if oname in hit_nbytes:
                             meta["nbytes"] = int(hit_nbytes[oname])
                     av = AnnotatedValue.produce(
@@ -481,8 +527,10 @@ class SmartTask:
         if not plan.use_cache:
             cache = None
         self.executions += 1
+        self._note_service(dt)
         if self.zone is not None:
             self.zone_executions[self.zone] = self.zone_executions.get(self.zone, 0) + 1
+        self._charge_compute(store, plan)
         registry.log_visit(
             self.name, "-", "executed", self.version, note=f"wall={dt:.6f}s"
         )
@@ -538,6 +586,7 @@ class SmartTask:
                     meta = {"zone": self.zone, "nbytes": nbytes}
                     if self.ledger is not None:
                         self.ledger.register_resident(chash, self.zone)
+                    store.note_zone_resident(chash, self.zone)
                 av = AnnotatedValue.produce(
                     chash, uri, self.name, self.version, region=self.region,
                     meta=meta,
@@ -578,6 +627,8 @@ class SmartTask:
                 self.ledger.on_materialize(
                     av.chash, int(nbytes), av.meta.get("zone"), self.zone
                 )
+                if self.zone is not None:
+                    store.note_zone_resident(av.chash, self.zone)
 
     def finish_remote(
         self,
@@ -622,8 +673,10 @@ class SmartTask:
                 svc.frozen_responses.extend(calls)
         dt = float(outcome["wall_s"])
         self.executions += 1
+        self._note_service(dt)
         if self.zone is not None:
             self.zone_executions[self.zone] = self.zone_executions.get(self.zone, 0) + 1
+        self._charge_compute(store, plan)
         registry.log_visit(
             self.name, "-", "executed", self.version, note=f"wall={dt:.6f}s"
         )
@@ -649,6 +702,7 @@ class SmartTask:
                     meta = {"zone": self.zone, "nbytes": nbytes}
                     if self.ledger is not None:
                         self.ledger.register_resident(chash, self.zone)
+                    store.note_zone_resident(chash, self.zone)
                 av = AnnotatedValue.produce(
                     chash, uri, self.name, self.version, region=self.region,
                     meta=meta,
@@ -686,6 +740,10 @@ class SmartTask:
             src_zone = av.meta.get("zone")
             nbytes = av.meta.get("nbytes") or store.nbytes_of(av.chash) or 0
             self.ledger.on_materialize(av.chash, int(nbytes), src_zone, self.zone)
+            if self.zone is not None:
+                # the payload is now replicated here: future memo hits in
+                # this zone serve from the local replica (zone-local tier)
+                store.note_zone_resident(av.chash, self.zone)
         return store.get(store.pin_local(av.uri, region=av.region))
 
     def _materialize_batch(self, store: ArtifactStore, avs: list) -> list:

@@ -22,6 +22,7 @@ record per event:
   memo       MemoCache.insert                   (memo table contents)
   topology   PipelineManager                    (zone/tier/link-cost spec)
   ledger     TransferLedger                     (residency + byte charges)
+  scale      AdaptiveExecutor                   (pool-resize decisions)
   checkpoint Journal.compact                    (folded-history snapshot)
   ========== ==========================================================
 
@@ -867,6 +868,9 @@ class ReplayedJournal:
     records: int = 0
     truncated: int = 0
     counts: dict = dataclasses.field(default_factory=dict)
+    # AdaptiveExecutor pool-resize decisions, in journal order — the
+    # autoscaling story replays alongside the provenance it never affects
+    scales: list = dataclasses.field(default_factory=list)
     # segment-chain provenance of the replay itself
     segments: int = 1
     checkpoints: int = 0
@@ -1003,6 +1007,7 @@ def _apply_records(records: list, truncated: int, chain: Optional[dict] = None) 
     ledger = topology = cache = None
     workspace = ""
     counts: dict = {}
+    scales: list = []
     records_compacted = 0
     for rec in records:
         kind = rec.get("kind")
@@ -1068,6 +1073,14 @@ def _apply_records(records: list, truncated: int, chain: Optional[dict] = None) 
                 ledger.on_materialize(
                     data["chash"], int(data["nbytes"]), data["src"], data["dst"]
                 )
+            elif data.get("op") == "execute":
+                ledger.on_execute(data["zone"], int(data["nbytes"]))
+            elif data.get("op") == "zone_local":
+                ledger.credit_zone_local(
+                    data["chash"], int(data["nbytes"]), data["zone"]
+                )
+        elif kind == "scale":
+            scales.append(dict(data))
         # cache_hit records are counted (counts) but carry no registry state:
         # the memo short-circuit already journaled its visitor-log entries.
     return ReplayedJournal(
@@ -1079,6 +1092,7 @@ def _apply_records(records: list, truncated: int, chain: Optional[dict] = None) 
         records=len(records),
         truncated=truncated,
         counts=counts,
+        scales=scales,
         segments=(chain or {}).get("segments", 1),
         checkpoints=(chain or {}).get("checkpoints", 0),
         records_compacted=records_compacted,

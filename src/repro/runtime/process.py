@@ -121,6 +121,30 @@ class ProcessExecutor(InlineExecutor):
         self._workers[slot] = None
         self.worker_restarts += 1
 
+    def resize(self, max_workers: int) -> None:
+        """Adopt a new pool size between waves (the
+        :class:`~repro.workspace.executors.AdaptiveExecutor` seam). Growing
+        appends empty slots — workers fork lazily when a wave first needs
+        them; shrinking stops the excess workers gracefully. All provenance
+        is minted parent-side in wave order, so pool size never affects
+        merge order, ledgers, or the journal's forensic stories."""
+        if max_workers < 1:
+            raise ValueError(f"max_workers must be >= 1, got {max_workers}")
+        max_workers = int(max_workers)
+        if max_workers == self.max_workers:
+            return
+        if max_workers > self.max_workers:
+            self._workers.extend([None] * (max_workers - self.max_workers))
+        else:
+            for slot in range(max_workers, self.max_workers):
+                w = self._workers[slot]
+                if w is not None:
+                    self._retired_bytes_sent += w.bytes_sent
+                    self._retired_bytes_received += w.bytes_received
+                    w.stop()
+            del self._workers[max_workers:]
+        self.max_workers = max_workers
+
     def kill_worker(self, slot: int = 0) -> bool:
         """Chaos/test helper: SIGKILL one pool worker. The next wave (or the
         in-flight one) detects the death, journals the anomaly, and

@@ -395,6 +395,10 @@ class ZonedProcessExecutor(InlineExecutor):
         t.executions += 1
         if t.zone is not None:
             t.zone_executions[t.zone] = t.zone_executions.get(t.zone, 0) + 1
+        # the runner's forked ledger is invisible here: replicate the
+        # compute-account charge exactly like account_remote_inputs does
+        # for the transfer charges (finish_remote's order)
+        t._charge_compute(manager.store, plan)
         for rec in outcome.get("records", ()):
             if rec["kind"] == "av":
                 manager.registry.restore_av(rec["data"])

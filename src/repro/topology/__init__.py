@@ -24,6 +24,7 @@ from .ledger import TransferLedger
 from .partition import ZonePartition, extract_partitions
 from .placement import (
     DataGravityPlacement,
+    EnergyAwarePlacement,
     PinPlacement,
     PlacementPolicy,
     make_placement,
@@ -42,6 +43,6 @@ __all__ = [
     "default_topology",
     "TransferLedger",
     "PlacementPolicy", "PinPlacement", "DataGravityPlacement",
-    "make_placement",
+    "EnergyAwarePlacement", "make_placement",
     "ZonePartition", "extract_partitions",
 ]

@@ -18,6 +18,15 @@ time**, which zone each about-to-fire task executes in:
     snapshot already ingested into the policy buffers, the shares are exact
     for the bytes about to be consumed; ``swap_new_for_old`` reuse of stale
     values is not counted (only data that just arrived exerts gravity).
+  - :class:`EnergyAwarePlacement` (``"energy"``) — an unpinned task runs in
+    the zone minimizing *total joules*: the transfer energy of pulling its
+    pending input bytes from their resident zones **plus** the compute
+    energy of processing them there (the zone's ``compute_j_per_mb``
+    coefficient). Gravity minimizes bytes moved; energy placement also
+    weighs how expensive each zone's silicon is per byte, so it ships data
+    off a power-hungry device to a nearby efficient edge site whenever the
+    radio joules cost less than the compute joules saved — the paper's §IV
+    sustainability objective as a placement rule.
 
 Placement runs on the scheduler thread before ``run_wave`` hands the wave
 to the executor, so zone assignment is deterministic: same pipeline, same
@@ -99,8 +108,17 @@ class DataGravityPlacement(PinPlacement):
     @staticmethod
     def _byte_shares(task: "SmartTask") -> dict:
         shares: dict = {}
+        seen: set = set()
         for buf in task.policy.buffers.values():
+            # a sliding-window consumer (``input[N/k]``) holds a fresh value
+            # in both buf.fresh and buf.window until a snapshot consumes it
+            # — dedupe by AV uid so each pending value exerts gravity once
             for av in list(buf.fresh) + list(buf.window):
+                uid = getattr(av, "uid", None)
+                if uid is not None:
+                    if uid in seen:
+                        continue
+                    seen.add(uid)
                 meta = getattr(av, "meta", None)
                 if not isinstance(meta, dict):
                     continue
@@ -111,14 +129,57 @@ class DataGravityPlacement(PinPlacement):
         return shares
 
 
-_POLICIES = {PinPlacement.name: PinPlacement, DataGravityPlacement.name: DataGravityPlacement}
+class EnergyAwarePlacement(DataGravityPlacement):
+    """Place an unpinned task in the zone minimizing transfer + compute
+    joules for its pending input bytes.
+
+    The assignment is a *pure function* of (topology, pending AV byte
+    shares, per-zone compute coefficients): candidate cost is
+
+        cost(z) = Σ_src transfer_energy_j(src → z, bytes_src)
+                + compute_energy_j(z, Σ bytes)
+
+    evaluated over the topology's zones in declaration order with ties
+    breaking to the earliest-declared zone — so placements, ledgers, and
+    provenance fingerprints stay identical across every executor backend.
+    """
+
+    name = "energy"
+
+    def zone_for(self, task: "SmartTask", manager: "PipelineManager") -> str:
+        if task.pinned_zone is not None:
+            return task.pinned_zone
+        shares = self._byte_shares(task)
+        if not shares:
+            return task.zone or self.topology.default_zone
+        total = sum(shares.values())
+        topo = self.topology
+        best_zone, best_cost = None, None
+        for z in topo.zone_names():
+            cost = topo.compute_energy_j(z, total)
+            for src in sorted(shares):
+                if src == z:
+                    continue
+                cost += topo.transfer_energy_j(src, z, shares[src])
+            # strict < keeps the earliest-declared zone on exact ties
+            if best_cost is None or cost < best_cost:
+                best_zone, best_cost = z, cost
+        return best_zone or self.topology.default_zone
+
+
+_POLICIES = {
+    PinPlacement.name: PinPlacement,
+    DataGravityPlacement.name: DataGravityPlacement,
+    EnergyAwarePlacement.name: EnergyAwarePlacement,
+}
 
 
 def make_placement(
     spec: Union[str, PlacementPolicy, None], topology: Topology
 ) -> PlacementPolicy:
-    """Resolve ``"pin"`` / ``"data_gravity"`` / a policy instance / None
-    (→ data_gravity, the smart default) into a bound policy."""
+    """Resolve ``"pin"`` / ``"data_gravity"`` / ``"energy"`` / a policy
+    instance / None (→ data_gravity, the smart default) into a bound
+    policy."""
     if isinstance(spec, PlacementPolicy):
         if spec.topology is not topology:
             # A policy bound elsewhere would place tasks into zones this

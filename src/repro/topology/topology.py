@@ -44,6 +44,17 @@ _TIER_DEFAULTS = {
     ("device", "device"): (10.0, 10.0, 0.10),
 }
 
+# Default compute-energy coefficient by tier: joules burned per MB of input
+# processed in a zone of that tier. Datacenter silicon is the most efficient
+# per byte; battery-powered device hardware the least. Overridable per zone
+# (``Topology.zone(..., compute_j_per_mb=...)``) so a topology can model an
+# efficient edge accelerator or a power-hungry legacy site.
+_TIER_COMPUTE_DEFAULTS = {
+    "cloud": 0.02,
+    "edge": 0.05,
+    "device": 0.12,
+}
+
 
 class TopologyError(ValueError):
     """Bad topology declaration (unknown tier, duplicate/unknown zone)."""
@@ -51,10 +62,17 @@ class TopologyError(ValueError):
 
 @dataclasses.dataclass(frozen=True)
 class Zone:
-    """One placement domain in the extended cloud."""
+    """One placement domain in the extended cloud.
+
+    ``compute_j_per_mb`` is the zone's compute-energy coefficient: joules
+    per MB of input bytes processed by a task executing here (resolved from
+    the tier default at declaration when not set explicitly). It is what
+    :class:`~repro.topology.placement.EnergyAwarePlacement` trades against
+    link transfer energy, and what the ledger prices executions with."""
 
     name: str
     tier: str = "cloud"
+    compute_j_per_mb: float = _TIER_COMPUTE_DEFAULTS["cloud"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,12 +111,26 @@ class Topology:
         self._default_zone = default_zone
 
     # -- declaration --------------------------------------------------------
-    def zone(self, name: str, tier: str = "cloud") -> Zone:
+    def zone(
+        self,
+        name: str,
+        tier: str = "cloud",
+        compute_j_per_mb: Optional[float] = None,
+    ) -> Zone:
         if tier not in TIERS:
             raise TopologyError(f"unknown tier {tier!r} (choose from {TIERS})")
         if name in self._zones:
             raise TopologyError(f"duplicate zone {name!r}")
-        z = Zone(name, tier)
+        coeff = (
+            float(compute_j_per_mb)
+            if compute_j_per_mb is not None
+            else _TIER_COMPUTE_DEFAULTS[tier]
+        )
+        if coeff < 0:
+            raise TopologyError(
+                f"zone {name!r}: compute_j_per_mb must be >= 0, got {coeff}"
+            )
+        z = Zone(name, tier, coeff)
         self._zones[name] = z
         return z
 
@@ -167,6 +199,16 @@ class Topology:
                 raise TopologyError(f"unknown zone {z!r} in topology {self.name!r}")
         return ZoneLink(src, dst, *self._tier_defaults(src, dst))
 
+    def compute_j_per_mb(self, zone: str) -> float:
+        """The zone's compute-energy coefficient (joules per MB processed)."""
+        if zone not in self._zones:
+            raise TopologyError(f"unknown zone {zone!r} in topology {self.name!r}")
+        return self._zones[zone].compute_j_per_mb
+
+    def compute_energy_j(self, zone: str, nbytes: int) -> float:
+        """Joules to process ``nbytes`` of input in ``zone``."""
+        return (nbytes / 1e6) * self.compute_j_per_mb(zone)
+
     def transfer_energy_j(self, src: str, dst: str, nbytes: int) -> float:
         return self.cost(src, dst).transfer_energy_j(nbytes)
 
@@ -178,6 +220,9 @@ class Topology:
             "name": self.name,
             "default_zone": self.default_zone,
             "zones": {z.name: z.tier for z in self._zones.values()},
+            "compute": {
+                z.name: z.compute_j_per_mb for z in self._zones.values()
+            },
             "links": {
                 f"{s}->{d}": {
                     "bandwidth_mbps": l.bandwidth_mbps,
@@ -195,8 +240,11 @@ class Topology:
         energy with the same zone tiers and link costs as the original
         process."""
         topo = cls(spec.get("name", "topology"), default_zone=spec.get("default_zone"))
+        compute = spec.get("compute") or {}
         for zname, tier in (spec.get("zones") or {}).items():
-            topo.zone(zname, tier=tier)
+            # pre-"compute" journals carry no coefficients; the tier default
+            # applies, matching what the live process priced with
+            topo.zone(zname, tier=tier, compute_j_per_mb=compute.get(zname))
         for pair, costs in (spec.get("links") or {}).items():
             src, _, dst = pair.partition("->")
             topo.link(

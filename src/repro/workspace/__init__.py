@@ -15,6 +15,7 @@ backend protocol (InlineExecutor, MeshExecutor).
 """
 
 from .executors import (
+    AdaptiveExecutor,
     ConcurrentExecutor,
     Executor,
     InlineExecutor,
@@ -33,8 +34,8 @@ from .workspace import (
 )
 
 __all__ = [
-    "ConcurrentExecutor", "Executor", "InlineExecutor", "MeshExecutor",
-    "ZonedExecutor", "default_executor",
+    "AdaptiveExecutor", "ConcurrentExecutor", "Executor", "InlineExecutor",
+    "MeshExecutor", "ZonedExecutor", "default_executor",
     "Port", "TaskHandle", "Wire", "WiringError",
     "RunResult", "TaskResult", "Watcher", "Workspace",
     "WorkspaceFrozenError", "service",

@@ -151,6 +151,21 @@ class ConcurrentExecutor(InlineExecutor):
         # serialized emission is deterministic.
         return [(t.name, f.result()) for t, f in zip(tasks, futures)]
 
+    def resize(self, max_workers: int) -> None:
+        """Adopt a new pool size between waves (the
+        :class:`AdaptiveExecutor` seam). The old pool is drained and a new
+        one is built lazily at the next multi-task wave; results are always
+        zipped back in wave order, so pool size never affects merge order
+        or provenance."""
+        if max_workers < 1:
+            raise ValueError(f"max_workers must be >= 1, got {max_workers}")
+        if max_workers == self.max_workers:
+            return
+        self.max_workers = max_workers
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
     def shutdown(self) -> None:
         if self._pool is not None:
             self._pool.shutdown(wait=True)
@@ -245,6 +260,145 @@ class ZonedExecutor(InlineExecutor):
         return f"ZonedExecutor({inner})"
 
 
+class AdaptiveExecutor(InlineExecutor):
+    """Feedback-driven autoscaler around a pool-bearing backend.
+
+    Between waves — never inside one — the wrapper reads the scheduler's
+    :class:`~repro.core.scheduler.LoadSignals` and resizes the ``inner``
+    pool (thread or process) toward the p95 wave width, clamped to
+    ``[min_workers, max_workers]``:
+
+      - **scale up** immediately when the signals want a bigger pool (a
+        burst is presenting work right now);
+      - **scale down** only after ``scale_down_patience`` consecutive waves
+        wanted a smaller one (hysteresis: troughs must prove themselves
+        before workers are released).
+
+    Pool size never affects merge order or provenance — the scheduler
+    serializes emission in wave order regardless — so the decision sequence
+    is free to act on live signals. Wave widths are a pure function of the
+    push schedule, hence so are the decisions: the same run produces the
+    same resize sequence under every backend. Every resize is journaled as
+    a typed ``scale`` record, and ``Workspace.from_journal`` replays the
+    decision history (``ReplayedJournal.scales``).
+    """
+
+    def __init__(
+        self,
+        inner: Optional[InlineExecutor] = None,
+        *,
+        min_workers: int = 1,
+        max_workers: int = 8,
+        scale_down_patience: int = 3,
+    ) -> None:
+        super().__init__()
+        if min_workers < 1:
+            raise ValueError(f"min_workers must be >= 1, got {min_workers}")
+        if max_workers < min_workers:
+            raise ValueError(
+                f"max_workers ({max_workers}) must be >= min_workers ({min_workers})"
+            )
+        if scale_down_patience < 1:
+            raise ValueError(
+                f"scale_down_patience must be >= 1, got {scale_down_patience}"
+            )
+        if inner is None:
+            inner = ConcurrentExecutor(max_workers=min_workers)
+        if not callable(getattr(inner, "resize", None)):
+            raise TypeError(
+                f"AdaptiveExecutor needs a pool-bearing inner executor with a "
+                f"resize(n) method (ConcurrentExecutor or ProcessExecutor), "
+                f"got {inner!r}"
+            )
+        self.inner = inner
+        self.min_workers = min_workers
+        self.max_workers = max_workers
+        self.scale_down_patience = scale_down_patience
+        self._calm = 0  # consecutive waves that wanted a smaller pool
+        self.resizes = 0
+        self.scale_ups = 0
+        self.scale_downs = 0
+        self.scale_history: list = []  # journaled scale events, in order
+        start = min(max(inner.max_workers, min_workers), max_workers)
+        if start != inner.max_workers:
+            inner.resize(start)
+
+    @property
+    def current_workers(self) -> int:
+        return self.inner.max_workers
+
+    def run_wave(self, manager, tasks: list) -> list:
+        self._maybe_resize(manager, len(tasks))
+        self.waves_run += 1
+        return self.inner.run_wave(manager, tasks)
+
+    def _maybe_resize(self, manager, wave_width: int) -> None:
+        sched = getattr(manager, "scheduler", None)
+        load = getattr(sched, "load", None)
+        if load is None:
+            return
+        current = self.inner.max_workers
+        # signals include the wave about to run (observe_wave precedes
+        # run_wave); take the larger of p95 and this wave's width so a
+        # burst wider than recent history is served, not queued
+        target = max(int(load.recommended_workers), int(wave_width))
+        target = max(self.min_workers, min(self.max_workers, target))
+        if target > current:
+            self._calm = 0
+            self._apply(manager, load, current, target, "up")
+        elif target < current:
+            self._calm += 1
+            if self._calm >= self.scale_down_patience:
+                self._calm = 0
+                self._apply(manager, load, current, target, "down")
+        else:
+            self._calm = 0
+
+    def _apply(self, manager, load, current: int, target: int, direction: str) -> None:
+        self.inner.resize(target)
+        self.resizes += 1
+        if direction == "up":
+            self.scale_ups += 1
+        else:
+            self.scale_downs += 1
+        event = {
+            "executor": type(self.inner).__name__,
+            "wave": self.waves_run,
+            "from": current,
+            "to": target,
+            "direction": direction,
+            "width_p95": int(load.wave_width_p95),
+            "queue_high_water": int(load.queue_depth_high_water),
+        }
+        self.scale_history.append(event)
+        journal = getattr(manager, "journal", None)
+        if journal is not None and not getattr(journal, "closed", False):
+            journal.append("scale", event)
+
+    def shutdown(self) -> None:
+        shut = getattr(self.inner, "shutdown", None)
+        if shut is not None:
+            shut()
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out["current_workers"] = self.inner.max_workers
+        out["min_workers"] = self.min_workers
+        out["max_workers"] = self.max_workers
+        out["resizes"] = self.resizes
+        out["scale_ups"] = self.scale_ups
+        out["scale_downs"] = self.scale_downs
+        out["last_scale"] = self.scale_history[-1] if self.scale_history else None
+        out["inner"] = self.inner.stats()
+        return out
+
+    def __repr__(self) -> str:
+        return (
+            f"AdaptiveExecutor(inner={self.inner!r}, "
+            f"band=[{self.min_workers},{self.max_workers}])"
+        )
+
+
 EXECUTOR_CHOICES = (
     "inline",
     "concurrent",
@@ -252,6 +406,8 @@ EXECUTOR_CHOICES = (
     "zoned-concurrent",
     "process",
     "zoned-process",
+    "adaptive",
+    "zoned-adaptive",
 )
 
 
@@ -271,9 +427,10 @@ def _env_max_workers() -> int:
 def default_executor() -> InlineExecutor:
     """Backend selected by the ``KOALJA_EXECUTOR`` env var (one of
     ``inline | concurrent | zoned | zoned-concurrent | process |
-    zoned-process``); ``KOALJA_MAX_WORKERS`` sizes thread and process
-    pools. Lets CI smoke every execution substrate across the whole suite
-    without code changes."""
+    zoned-process | adaptive | zoned-adaptive``); ``KOALJA_MAX_WORKERS``
+    sizes thread and process pools (for adaptive backends it is the upper
+    bound of the autoscaling band). Lets CI smoke every execution substrate
+    across the whole suite without code changes."""
     name = os.environ.get("KOALJA_EXECUTOR", "inline").strip().lower()
     if name in ("concurrent", "threads", "threadpool"):
         return ConcurrentExecutor(max_workers=_env_max_workers())
@@ -289,6 +446,10 @@ def default_executor() -> InlineExecutor:
         from repro.runtime import ZonedProcessExecutor
 
         return ZonedProcessExecutor(max_workers=_env_max_workers())
+    if name in ("adaptive",):
+        return AdaptiveExecutor(max_workers=_env_max_workers())
+    if name in ("zoned-adaptive", "zoned_adaptive"):
+        return ZonedExecutor(inner=AdaptiveExecutor(max_workers=_env_max_workers()))
     if name in ("", "inline"):
         return InlineExecutor()
     raise ValueError(

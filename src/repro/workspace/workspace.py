@@ -739,6 +739,9 @@ class Workspace:
                 "segments": self._replay.segments,
                 "checkpoints": self._replay.checkpoints,
                 "records_compacted": self._replay.records_compacted,
+                # AdaptiveExecutor resize decisions, in journal order — the
+                # autoscaling history survives restarts like everything else
+                "scale_events": list(self._replay.scales),
             }
             if self._replay.ledger is not None:
                 # the replayed transfer ledger answers where the engine's

@@ -139,6 +139,62 @@ class TestTreeTier:
         assert [tree_digest(a) for a in arrs] == want
 
 
+class TestBackendSelection:
+    def test_unknown_backend_fails_loudly(self, monkeypatch):
+        monkeypatch.setenv("KOALJA_HASH_BACKEND", "palas")  # typo'd
+        with pytest.raises(ValueError, match="KOALJA_HASH_BACKEND"):
+            content_hash_batch([np.arange(8)])
+
+    def test_kernel_failure_counts_and_reports(self, monkeypatch):
+        """A broken accelerator kernel degrades to numpy with a counted,
+        reported fallback — never a silent ``except: pass``. The digest is
+        bit-identical either way."""
+        import sys
+
+        from repro.core.hashing import bind_fallback_anomalies
+
+        big = np.arange(2_000_000, dtype=np.uint32)  # > 4 MiB: tree tier
+        want = tree_digest(big)  # numpy reference, no backend in play
+
+        notes = []
+        monkeypatch.setitem(sys.modules, "repro.kernels.hash_tree", None)
+        monkeypatch.setenv("KOALJA_HASH_BACKEND", "pallas")
+        before = hashing_stats()["backend_fallbacks"]
+        bind_fallback_anomalies(notes.append)
+        try:
+            got = tree_digest(big)
+        finally:
+            bind_fallback_anomalies(None)
+        assert got == want
+        assert hashing_stats()["backend_fallbacks"] == before + 1
+        assert notes and "hash_backend_fallback" in notes[0]
+        assert "pallas" in notes[0]
+
+    def test_workspace_routes_fallback_to_anomaly_log(self, monkeypatch):
+        """Through the stack: a workspace push that trips the kernel
+        fallback lands a ``hashing`` anomaly in the provenance registry."""
+        import sys
+
+        from repro.workspace import Workspace
+
+        monkeypatch.setitem(sys.modules, "repro.kernels.hash_tree", None)
+        monkeypatch.setenv("KOALJA_HASH_BACKEND", "jnp")
+        ws = Workspace("fallback", topology=False, cache=False)
+        t = ws.task(lambda x: {"y": x + 1}, name="big",
+                    inputs=["x"], outputs=["y"])
+        try:
+            ws.push(t, x=np.arange(2_000_000, dtype=np.uint32))
+        finally:
+            from repro.core.hashing import bind_fallback_anomalies
+
+            bind_fallback_anomalies(None)
+        anomalies = [
+            e for e in ws.visitor_log("hashing") if e["event"] == "anomaly"
+        ]
+        assert anomalies
+        assert "hash_backend_fallback" in (anomalies[0]["note"] or "")
+
+
 class TestUnstableFallback:
     def test_unpicklable_payload_reports_anomaly(self):
         notes = []

@@ -21,6 +21,7 @@ from repro.topology import (
     make_placement,
 )
 from repro.workspace import (
+    AdaptiveExecutor,
     ConcurrentExecutor,
     InlineExecutor,
     WiringError,
@@ -269,6 +270,41 @@ class TestDataGravityPlacement:
         assert "sink" in zones["cloud"]["tasks"]  # pinned beats gravity
         assert ws.stats()["topology"]["ledger"]["bytes_moved_crosszone"] == 128
 
+    def test_byte_shares_dedupe_by_uid(self):
+        """An AV pending in more than one buffer of the same task (a window
+        consumer holds values in both ``fresh`` and ``window``; a dual-wired
+        output lands the same AV in two input buffers) exerts gravity once:
+        shares weigh payload bytes resident in a zone, not reference count."""
+        from types import SimpleNamespace as NS
+
+        av1 = NS(uid="u1", meta={"zone": "edge", "nbytes": 256})
+        av2 = NS(uid="u2", meta={"zone": "edge", "nbytes": 256})
+        av3 = NS(uid="u3", meta={"zone": "cloud", "nbytes": 100})
+        task = NS(policy=NS(buffers={
+            "a": NS(fresh=[av1, av2], window=[av1]),  # av1 in both deques
+            "b": NS(fresh=[av2], window=[av3]),  # av2 also wired to input b
+        }))
+        shares = DataGravityPlacement._byte_shares(task)
+        assert shares == {"edge": 512, "cloud": 100}
+
+    def test_byte_shares_pinned_for_window_consumer(self):
+        """Regression: the pending byte shares of an ``input[N/k]`` consumer
+        are exactly one count per resident AV — 4 window slots + 1 fresh
+        arrival x 256B, never double-counted across the two deques."""
+        topo = Topology.three_zone()
+        ws = Workspace("w", topology=topo, placement="data_gravity", cache=False)
+        src = ws.source(lambda x: {"x": x}, name="src", outputs=["x"]).place("edge")
+        win = ws.task(lambda x: {"y": float(np.sum(x[-1]))}, name="win",
+                      inputs=["x[4/2]"], outputs=["y"])
+        src["x"] >> win["x"]
+        for i in range(5):
+            ws.push("src", x=np.full(64, float(i), np.float32))  # 256 B each
+        task = ws.pipeline.tasks["win"]
+        buf = task.policy.buffers["x"]
+        assert (len(buf.window), len(buf.fresh)) == (4, 1)
+        shares = DataGravityPlacement._byte_shares(task)
+        assert shares == {"edge": 5 * 256}
+
     def test_crosszone_refs_counted_on_links(self):
         ws = _drive(_iot_ws("pin"))
         stats = ws.stats()
@@ -334,6 +370,76 @@ class TestDataGravityPlacement:
         assert led["bytes_not_moved_crosszone"] == 256
 
 
+class TestEnergyAwarePlacement:
+    """ISSUE 10: the ``energy`` policy minimizes transfer + compute joules
+    as a pure function of (topology, pending bytes, coefficients)."""
+
+    def _wan_topology(self):
+        """Cheap radio hop to the edge, metered WAN to the cloud, compute
+        priced by tier defaults (cloud 0.02 < edge 0.05 < device 0.12)."""
+        t = Topology("wan")
+        t.zone("cloud", tier="cloud")
+        t.zone("edge", tier="edge")
+        t.zone("device", tier="device")
+        t.link("device", "edge", latency_ms=1, bandwidth_mbps=1000,
+               energy_j_per_mb=0.01)
+        t.link("edge", "cloud", latency_ms=20, bandwidth_mbps=100,
+               energy_j_per_mb=0.05)
+        t.link("device", "cloud", latency_ms=50, bandwidth_mbps=10,
+               energy_j_per_mb=0.5)
+        return t
+
+    def test_registered_and_env_valid(self):
+        from repro.topology import EnergyAwarePlacement
+
+        topo = self._wan_topology()
+        pol = make_placement("energy", topo)
+        assert isinstance(pol, EnergyAwarePlacement)
+        assert isinstance(pol, DataGravityPlacement)  # shares _byte_shares
+
+    def test_minimizes_transfer_plus_compute(self):
+        """Device-born bytes: gravity would keep the consumer on the
+        battery-powered device (0.12 J/MB compute); energy pays the cheap
+        radio hop (0.01) to the edge's 0.05 compute instead."""
+        from types import SimpleNamespace as NS
+
+        topo = self._wan_topology()
+        pol = make_placement("energy", topo)
+        av = NS(uid="u1", meta={"zone": "device", "nbytes": 1_000_000})
+        task = NS(pinned_zone=None, zone=None,
+                  policy=NS(buffers={"x": NS(fresh=[av], window=[])}))
+        assert pol.zone_for(task, None) == "edge"
+        # gravity on the same pending bytes stays at the device
+        assert make_placement("data_gravity", topo).zone_for(task, None) == "device"
+
+    def test_pin_and_empty_buffers_respected(self):
+        from types import SimpleNamespace as NS
+
+        topo = self._wan_topology()
+        pol = make_placement("energy", topo)
+        pinned = NS(pinned_zone="device", zone=None, policy=NS(buffers={}))
+        assert pol.zone_for(pinned, None) == "device"
+        idle = NS(pinned_zone=None, zone=None, policy=NS(buffers={}))
+        assert pol.zone_for(idle, None) == "cloud"  # default zone
+
+    def test_through_the_stack_lands_on_edge(self):
+        ws = Workspace("energy", topology=self._wan_topology(),
+                       placement="energy", cache=False)
+        src = ws.source(lambda x: {"x": x}, name="src",
+                        outputs=["x"]).place("device")
+        t = ws.task(lambda x: {"y": float(np.sum(x))}, name="analyze",
+                    inputs=["x"], outputs=["y"])
+        src["x"] >> t["x"]
+        ws.push("src", x=np.ones(65536, np.float32))
+        zones = ws.stats()["topology"]["zones"]
+        assert "analyze" in zones["edge"]["tasks"]
+        led = ws.stats()["topology"]["ledger"]
+        assert led["compute_energy_j"] > 0
+        assert led["total_energy_j"] == pytest.approx(
+            led["transfer_energy_j"] + led["compute_energy_j"]
+        )
+
+
 # ---------------------------------------------------------------------------
 # determinism across executors (the ISSUE 4 contract)
 # ---------------------------------------------------------------------------
@@ -359,7 +465,7 @@ def _fingerprint(ws):
 
 
 class TestExecutorDeterminism:
-    @pytest.mark.parametrize("placement", ["pin", "data_gravity"])
+    @pytest.mark.parametrize("placement", ["pin", "data_gravity", "energy"])
     def test_identical_across_backends(self, placement):
         from repro.runtime import ProcessExecutor, ZonedProcessExecutor
 
@@ -370,6 +476,8 @@ class TestExecutorDeterminism:
             ZonedExecutor(inner=ConcurrentExecutor(max_workers=4)),
             ProcessExecutor(max_workers=4),
             ZonedProcessExecutor(max_workers=4),
+            AdaptiveExecutor(min_workers=1, max_workers=4),
+            ZonedExecutor(inner=AdaptiveExecutor(min_workers=1, max_workers=4)),
         ]
         prints = []
         for ex in backends:
@@ -381,7 +489,7 @@ class TestExecutorDeterminism:
         for other in prints[1:]:
             assert other == prints[0]
 
-    @pytest.mark.parametrize("placement", ["pin", "data_gravity"])
+    @pytest.mark.parametrize("placement", ["pin", "data_gravity", "energy"])
     def test_identical_across_backends_with_coalescing(self, placement):
         """Arrival coalescing (PR 8) regroups firings inside one execute
         call; merge-FCFS order, visitor events, ledger bytes, and zone
@@ -397,6 +505,8 @@ class TestExecutorDeterminism:
             ZonedExecutor(inner=ConcurrentExecutor(max_workers=4)),
             ProcessExecutor(max_workers=4),
             ZonedProcessExecutor(max_workers=4),
+            AdaptiveExecutor(min_workers=1, max_workers=4),
+            ZonedExecutor(inner=AdaptiveExecutor(min_workers=1, max_workers=4)),
         ]
         for ex in backends:
             ws = _drive(_iot_ws(placement, executor=ex, coalesce=4), rounds=2)

@@ -1,12 +1,15 @@
 #!/usr/bin/env python
 """Perf-smoke gate: rerun the hot-path benchmarks and fail on regression.
 
-Runs the benches named in ``GATED`` (policy/arrival throughput, journal
-throughput, and the PR 8 vectorized data plane) and compares every gated
-throughput metric against the committed trajectory file
-``BENCH_koalja.json``. A metric that lands more than ``TOLERANCE`` below
-its committed value fails the gate; higher is never a failure (the
-trajectory file is refreshed by ``python -m benchmarks.run``, not here).
+Runs the benches named in ``GATED`` / ``GATED_LOWER`` (policy/arrival
+throughput, journal throughput, the PR 8 vectorized data plane, and the
+adaptive-runtime diurnal bench) and compares every gated metric against
+the committed trajectory file ``BENCH_koalja.json``. ``GATED`` metrics are
+higher-is-better rates: a value more than ``TOLERANCE`` below the
+committed one fails. ``GATED_LOWER`` metrics are lower-is-better costs
+(latency seconds, joules): a value more than ``TOLERANCE`` *above* the
+committed one fails. In both cases the gate only fails on regressions —
+improvements land via ``python -m benchmarks.run`` refreshing the file.
 
 Each gated bench runs in a fresh interpreter via ``benchmarks.run --one``
 — the same hermetic methodology that produces the committed baseline, so
@@ -41,7 +44,14 @@ GATED = {
     "B15_multitenant": ["records_per_s"],
 }
 
-TOLERANCE = 0.30  # fail when a metric drops >30% below the committed value
+# bench name -> gated lower-is-better metrics (costs: seconds, joules).
+# B16's joules are deterministic ledger arithmetic; its p99 carries the
+# modeled WAN time plus a little wall time, so the same tolerance holds.
+GATED_LOWER = {
+    "B16_diurnal_load": ["p99_push_s", "total_energy_j"],
+}
+
+TOLERANCE = 0.30  # fail when a metric lands >30% on the wrong side
 
 
 def _dig(result: dict, dotted: str):
@@ -84,50 +94,81 @@ def _run_hermetic(bench: str) -> dict:
 RETRIES = 2  # re-runs granted to a bench whose metrics land below floor
 
 
+def _limit(want: float, lower_is_better: bool) -> float:
+    """The worst acceptable value for a committed baseline."""
+    if lower_is_better:
+        return want * (1.0 + TOLERANCE)
+    return want * (1.0 - TOLERANCE)
+
+
+def _ok(got: float, limit: float, lower_is_better: bool) -> bool:
+    return got <= limit if lower_is_better else got >= limit
+
+
+def _gate_bench(bench: str, metrics: list, committed: dict,
+                lower_is_better: bool, failures: list) -> int:
+    """Run one bench (with noise retries) and gate its metrics; returns
+    the number of metrics actually checked."""
+    # fsync latency and scheduler jitter make single runs noisy; a bench
+    # only fails after RETRIES extra fresh-interpreter runs all leave
+    # some metric on the wrong side (best observed value counts)
+    pick = min if lower_is_better else max
+    best: dict = {}
+    for attempt in range(1 + RETRIES):
+        fresh = _run_hermetic(bench)
+        for dotted in metrics:
+            got = _dig(fresh, dotted)
+            if got is not None:
+                best[dotted] = pick(best.get(dotted, got), got)
+        if all(
+            committed.get(d) is None
+            or (
+                best.get(d) is not None
+                and _ok(best[d], _limit(float(committed[d]), lower_is_better),
+                        lower_is_better)
+            )
+            for d in metrics
+        ):
+            break
+    checked = 0
+    unit = "" if lower_is_better else "/s"
+    for dotted in metrics:
+        want = committed.get(dotted)
+        got = best.get(dotted)
+        if want is None:
+            print(f"SKIP {bench}.{dotted}: no committed baseline")
+            continue
+        if got is None:
+            failures.append(f"{bench}.{dotted}: metric missing from run")
+            continue
+        checked += 1
+        limit = _limit(float(want), lower_is_better)
+        good = _ok(got, limit, lower_is_better)
+        word = "ceiling" if lower_is_better else "floor"
+        print(
+            f"{'ok' if good else 'FAIL':4s} {bench}.{dotted}: {got:,.4g}{unit} "
+            f"(committed {float(want):,.4g}{unit}, {word} {limit:,.4g}{unit})"
+        )
+        if not good:
+            op = ">" if lower_is_better else "<"
+            failures.append(
+                f"{bench}.{dotted}: {got:,.4g} {op} {word} {limit:,.4g}"
+            )
+    return checked
+
+
 def main() -> int:
     baseline = json.loads(BASELINE.read_text())
-    failures, checked = [], 0
+    failures: list = []
+    checked = 0
     for bench, metrics in GATED.items():
-        committed = baseline.get(bench, {})
-        # fsync latency and scheduler jitter make single runs noisy; a
-        # bench only fails after RETRIES extra fresh-interpreter runs all
-        # leave some metric below its floor (best observed value counts)
-        best: dict = {}
-        for attempt in range(1 + RETRIES):
-            fresh = _run_hermetic(bench)
-            for dotted in metrics:
-                got = _dig(fresh, dotted)
-                if got is not None:
-                    best[dotted] = max(best.get(dotted, got), got)
-            if all(
-                committed.get(d) is None
-                or (
-                    best.get(d) is not None
-                    and best[d] >= float(committed[d]) * (1.0 - TOLERANCE)
-                )
-                for d in metrics
-            ):
-                break
-        for dotted in metrics:
-            want = committed.get(dotted)
-            got = best.get(dotted)
-            if want is None:
-                print(f"SKIP {bench}.{dotted}: no committed baseline")
-                continue
-            if got is None:
-                failures.append(f"{bench}.{dotted}: metric missing from run")
-                continue
-            checked += 1
-            floor = float(want) * (1.0 - TOLERANCE)
-            status = "FAIL" if got < floor else "ok"
-            print(
-                f"{status:4s} {bench}.{dotted}: {got:,.0f}/s "
-                f"(committed {float(want):,.0f}/s, floor {floor:,.0f}/s)"
-            )
-            if got < floor:
-                failures.append(
-                    f"{bench}.{dotted}: {got:,.0f}/s < floor {floor:,.0f}/s"
-                )
+        checked += _gate_bench(
+            bench, metrics, baseline.get(bench, {}), False, failures
+        )
+    for bench, metrics in GATED_LOWER.items():
+        checked += _gate_bench(
+            bench, metrics, baseline.get(bench, {}), True, failures
+        )
     if failures:
         print(f"\nperf-smoke FAILED ({len(failures)} regression(s)):")
         for f in failures:

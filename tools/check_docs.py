@@ -30,6 +30,7 @@ WALKTHROUGHS = (
     "docs/runtime.md",
     "docs/hotpath.md",
     "docs/tenancy.md",
+    "docs/adaptive.md",
 )
 
 # [text](target) — markdown links, excluding images handled identically
